@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONL results."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    return [json.loads(l) for l in open(path)]
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = ["| arch | shape | HBM GB/chip | t_compute s | t_memory s | "
+           "t_collective s | bound | useful fl. | MFU-bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skipped: {r['reason'][:40]} | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('hbm_gb_per_device', 0):.2f} "
+            f"| {r.get('t_compute', 0):.4f} | {r.get('t_memory', 0):.4f} "
+            f"| {r.get('t_collective', 0):.4f} | {r.get('bound', '')} "
+            f"| {r.get('useful_flops_frac', 0):.3f} "
+            f"| {r.get('mfu_bound', 0):.4f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | status | compile s | args GB | temp GB | "
+           "collectives (count) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"skip | — | — | — | — |")
+            continue
+        coll = ", ".join(f"{k}:{v[0]}" for k, v in
+                         r.get("collectives", {}).items() if v[0])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+            f"| {r.get('t_compile_s', 0):.0f} "
+            f"| {r.get('argument_size_in_bytes', 0) / 1e9:.2f} "
+            f"| {r.get('temp_size_in_bytes', 0) / 1e9:.2f} | {coll} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1])
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if which == "roofline":
+        print(roofline_table(rows))
+    elif which == "dryrun":
+        print(dryrun_table(rows))
+    elif which == "multipod":
+        print(roofline_table(rows, mesh="2x16x16"))

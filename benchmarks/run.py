@@ -1,0 +1,165 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figures 5/6/7 of the paper are
+reproduced twice: MEASURED at CPU scale (real launches through the real
+launcher) and MODELED at paper scale (constants calibrated to the paper and
+its cited baselines). EXPERIMENTS.md consumes this output verbatim.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _app(x):
+    return jnp.tanh(x @ jnp.ones((x.shape[-1], 16), x.dtype)).sum(-1)
+
+
+def bench_fig5_copy_time():
+    """Fig 5: staging ('copy') time vs N — measured + modeled."""
+    from repro.core.staging import (stage_parallel_pull, stage_point_to_point,
+                                    synth_env, tree_bytes)
+    from repro.core.launch_model import copy_time
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    env = synth_env(mb=4.0)
+    devices = jax.devices()
+    mesh = jax.make_mesh((len(devices),), ("data",))
+    shard_tree = {"exe": NamedSharding(mesh, P())}
+    rows = []
+    _, rec_pull = stage_parallel_pull(env, shard_tree)
+    _, rec_p2p = stage_point_to_point(env, devices)
+    rows.append(("fig5_copy_measured_pull", rec_pull.t_stage * 1e6,
+                 f"bytes={tree_bytes(env)}"))
+    rows.append(("fig5_copy_measured_p2p", rec_p2p.t_stage * 1e6,
+                 f"devices={len(devices)}"))
+    for n in (16, 256, 4096, 16384):
+        rows.append((f"fig5_copy_model_n{n}", copy_time(n) * 1e6,
+                     "paper-scale model"))
+    return rows
+
+
+def bench_fig6_launch_time():
+    """Fig 6: launch time vs N — measured (serial-VM vs LLMR array) +
+    modeled paper-scale curves incl. Azure and Eucalyptus."""
+    from repro.core.llmr import launch_instances
+    from repro.core.launch_model import CURVES
+
+    rows = []
+    for n in (16, 64, 256, 1024):
+        t0 = time.perf_counter()
+        launch_instances(_app, n, scheduler="array")
+        dt = time.perf_counter() - t0
+        rows.append((f"fig6_measured_llmr_n{n}", dt * 1e6 / n,
+                     f"total_s={dt:.3f}"))
+    for n in (16, 64):
+        t0 = time.perf_counter()
+        launch_instances(_app, n, scheduler="serial")
+        dt = time.perf_counter() - t0
+        rows.append((f"fig6_measured_serial_n{n}", dt * 1e6 / n,
+                     f"total_s={dt:.3f}"))
+    for name, fn in CURVES.items():
+        for n in (1024, 16384):
+            t = fn(n)
+            rows.append((f"fig6_model_{name}_n{n}", t * 1e6 / n,
+                         f"total_s={t:.1f}"))
+    return rows
+
+
+def bench_fig7_launch_rate():
+    """Fig 7: launch rate vs N (instances/second)."""
+    from repro.core.llmr import launch_instances
+    from repro.core.launch_model import CURVES
+
+    rows = []
+    for n in (256, 4096, 16384):
+        t0 = time.perf_counter()
+        launch_instances(_app, n, scheduler="array")
+        dt = time.perf_counter() - t0
+        rows.append((f"fig7_measured_llmr_n{n}", dt * 1e6,
+                     f"rate_per_s={n / dt:.1f}"))
+    for name, fn in CURVES.items():
+        t = fn(16384)
+        rows.append((f"fig7_model_{name}_n16384", t * 1e6,
+                     f"rate_per_s={16384 / t:.2f}"))
+    return rows
+
+
+def bench_wine_env_setup():
+    """Wine-layer analogue: per-family environment setup (trace+compile) vs
+    re-launch with a warm compile cache (the paper's Wine-vs-VM gap)."""
+    from repro.core.wine import WineAdapter, WineApp
+
+    rows = []
+    adapter = WineAdapter()
+    for arch in ("qwen3-14b", "mamba2-1.3b", "olmoe-1b-7b"):
+        app = WineApp(arch=arch, mode="train", smoke=True)
+        t0 = time.perf_counter()
+        inst = adapter.load(app)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        adapter.load(app, state=inst.state)
+        warm = time.perf_counter() - t0
+        rows.append((f"wine_load_cold_{arch}", cold * 1e6, ""))
+        rows.append((f"wine_load_warm_{arch}", warm * 1e6,
+                     f"speedup={cold / max(warm, 1e-9):.1f}x"))
+    return rows
+
+
+def bench_train_steps():
+    """Per-family smoke train-step latency (CPU, tiny configs)."""
+    from repro.configs import get_config
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import init_state, make_train_step
+
+    rows = []
+    for arch in ("qwen3-14b", "mamba2-1.3b", "deepseek-v2-236b"):
+        cfg = get_config(arch, smoke=True)
+        step = jax.jit(make_train_step(cfg, AdamWConfig()))
+        state = init_state(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.ones((2, 32), jnp.int32),
+                 "labels": jnp.ones((2, 32), jnp.int32)}
+        state, _ = jax.block_until_ready(step(state, batch))  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            state, m = step(state, batch)
+        jax.block_until_ready(state)
+        rows.append((f"train_step_{arch}", (time.perf_counter() - t0) / 5 * 1e6,
+                     f"loss={float(m['loss']):.3f}"))
+    return rows
+
+
+def bench_kernels():
+    """Pallas kernel interpret-mode validation timing (CPU correctness runs;
+    real perf comes from the TPU lowering, see EXPERIMENTS.md)."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import attention_ref
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 256, 64))
+    rows = []
+    t0 = time.perf_counter()
+    out = flash_attention(q, k, v, interpret=True, bq=128, bk=128)
+    rows.append(("kernel_flash_attn_interpret", (time.perf_counter() - t0) * 1e6,
+                 ""))
+    ref = attention_ref(q, k, v)
+    err = float(jnp.abs(out - ref).max())
+    rows.append(("kernel_flash_attn_maxerr", err * 1e6, f"err={err:.2e}"))
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in (bench_fig5_copy_time, bench_fig6_launch_time,
+                  bench_fig7_launch_rate, bench_wine_env_setup,
+                  bench_train_steps, bench_kernels):
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: the paper's experiment at laptop scale.
+
+Launch N instances of an 'application' two ways — serial per-instance
+provisioning (the heavyweight-VM baseline) and one LLMapReduce array job —
+and print the launch-time/rate table (Figs 6/7 at CPU scale).
+
+    PYTHONPATH=src python examples/quickstart.py [--n 1024]
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+
+from repro.core.launch_model import CURVES, headline
+from repro.core.llmr import launch_instances
+
+
+def app(x):
+    """The 'Windows application': a small compute task per instance."""
+    return jnp.tanh(x @ jnp.ones((x.shape[-1], 16), x.dtype)).sum()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--serial-n", type=int, default=32,
+                    help="instances for the (slow) serial baseline")
+    args = ap.parse_args()
+
+    print(f"== LLMapReduce array launch, n={args.n}")
+    t0 = time.perf_counter()
+    _, report = launch_instances(app, args.n, scheduler="array")
+    dt = time.perf_counter() - t0
+    print(f"   total {dt:.3f}s  rate {args.n / dt:,.0f} inst/s  "
+          f"waves={report.waves}")
+
+    print(f"== serial per-instance launch (VM-style), n={args.serial_n}")
+    t0 = time.perf_counter()
+    launch_instances(app, args.serial_n, scheduler="serial")
+    dts = time.perf_counter() - t0
+    per = dts / args.serial_n
+    print(f"   total {dts:.3f}s  rate {args.serial_n / dts:.1f} inst/s  "
+          f"({per * 1e3:.0f} ms/instance)")
+    print(f"   projected for n={args.n}: {per * args.n:.0f}s  "
+          f"-> array launch is ~{per * args.n / dt:,.0f}x faster")
+
+    print("== paper-scale model (16,384 instances on 256 KNL nodes)")
+    h = headline()
+    print(f"   llmr+wine:   {h['minutes']:.1f} min   "
+          f"({h['rate_per_s']:.0f} inst/s; paper claims ~5 min)")
+    for name, fn in CURVES.items():
+        if name != "wine-llmr":
+            print(f"   {name:20s} {fn(16384) / 60:10.0f} min")
+
+
+if __name__ == "__main__":
+    main()

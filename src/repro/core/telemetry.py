@@ -1,0 +1,50 @@
+"""Launch telemetry: the measurement harness behind Figs 5-7."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class LaunchRecord:
+    strategy: str
+    n_instances: int
+    t_schedule: float = 0.0      # scheduler interaction (submit) time
+    t_stage: float = 0.0         # weight/environment staging ("copy time")
+    t_spawn: float = 0.0         # instance start ("launch time" proper)
+    t_first_result: float = 0.0  # time to first completed task
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def total(self) -> float:
+        return self.t_schedule + self.t_stage + self.t_spawn
+
+    @property
+    def rate(self) -> float:
+        return self.n_instances / self.total if self.total > 0 else float("inf")
+
+    def row(self) -> str:
+        return (f"{self.strategy},{self.n_instances},{self.t_schedule:.4f},"
+                f"{self.t_stage:.4f},{self.t_spawn:.4f},{self.total:.4f},"
+                f"{self.rate:.2f}")
+
+
+HEADER = "strategy,n,t_schedule,t_stage,t_spawn,t_total,rate_per_s"
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def lap(self) -> float:
+        now = time.perf_counter()
+        dt = now - self.t0
+        self.t0 = now
+        return dt
+
+
+def table(records: List[LaunchRecord], title: Optional[str] = None) -> str:
+    lines = ([f"# {title}"] if title else []) + [HEADER]
+    lines += [r.row() for r in records]
+    return "\n".join(lines)

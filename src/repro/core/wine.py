@@ -1,0 +1,155 @@
+"""WineAdapter: the compatibility layer.
+
+Wine's job in the paper: present an unmodified Windows application with an
+environment "virtually indistinguishable" from its native OS, translating its
+ABI onto the host. Here the foreign "applications" are model families with
+mutually alien semantics (dense vs MoE routing vs SSM recurrences vs enc-dec
+cross-attention, train vs prefill vs decode), and the host is the JAX SPMD
+runtime. ``WineAdapter`` translates every family onto ONE runtime ABI:
+
+    load(app)             -> Instance   (trace+compile+stage = env setup)
+    Instance.run(inputs)  -> outputs    (one step)
+    Instance.state        -> params / caches
+
+The launcher (core.llmr) only ever sees this ABI — which is precisely what
+makes it workload-agnostic, the property the paper's whole pipeline rests on.
+Like Wine, translation is NOT emulation: nothing is interpreted per step; the
+translated program is native SPMD code after ``load``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, input_specs
+from repro.models import lm as lm_mod
+from repro.models.spec import SHAPES_BY_NAME, ModelConfig, ShapeCell
+from repro.sharding.partition import (batch_sharding, cache_sharding,
+                                      param_sharding, sharding_ctx)
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_state, make_train_step
+
+
+@dataclass(frozen=True)
+class WineApp:
+    """An 'application': (architecture, mode, shape) to be launched."""
+    arch: str
+    mode: str = "train"                    # train | prefill | decode
+    shape: str = "train_4k"
+    smoke: bool = False
+    microbatches: int = 1
+
+    def cell(self) -> ShapeCell:
+        return SHAPES_BY_NAME[self.shape]
+
+
+@dataclass
+class Instance:
+    app: WineApp
+    cfg: ModelConfig
+    step_fn: Callable                      # compiled
+    state: Any                             # params(+opt) or (params, caches)
+    load_report: dict = field(default_factory=dict)
+
+    def run(self, inputs: Any) -> Any:
+        out = self.step_fn(self.state, inputs)
+        if isinstance(out, tuple) and len(out) == 2:
+            self.state, result = out
+            return result
+        return out
+
+
+class WineAdapter:
+    """Uniform ABI over all registered model families."""
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None):
+        self.mesh = mesh
+        self._compile_cache: dict = {}
+
+    # -- translation layer ------------------------------------------------
+    def _build_train(self, app: WineApp, cfg: ModelConfig):
+        step = make_train_step(cfg, AdamWConfig(),
+                               microbatches=app.microbatches)
+
+        def traced(state, batch):
+            with sharding_ctx(self.mesh, "train"):
+                return step(state, batch)
+        return traced
+
+    def _build_decode(self, app: WineApp, cfg: ModelConfig):
+        def traced(state, inputs):
+            params, caches = state
+            with sharding_ctx(self.mesh, "serve"):
+                logits, caches = lm_mod.decode_step(
+                    params, caches, inputs["tokens"], inputs["positions"],
+                    cfg, enc_out=inputs.get("enc_out"))
+            return (params, caches), logits
+        return traced
+
+    def _build_prefill(self, app: WineApp, cfg: ModelConfig):
+        def traced(params, inputs):
+            with sharding_ctx(self.mesh, "prefill"):
+                enc = None
+                if cfg.encoder is not None:
+                    enc = lm_mod.encoder_apply(params, inputs["frames"], cfg)
+                    inputs = {k: v for k, v in inputs.items() if k != "frames"}
+                return lm_mod.prefill(params, inputs, cfg, enc_out=enc)
+        return traced
+
+    # -- public ABI --------------------------------------------------------
+    def load(self, app: WineApp, key=None, state: Any = None) -> Instance:
+        """Set up the 'Wine environment': build, compile, stage."""
+        t0 = time.perf_counter()
+        cfg = get_config(app.arch, smoke=app.smoke)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        builder = {"train": self._build_train, "decode": self._build_decode,
+                   "prefill": self._build_prefill}[app.mode]
+        fn = builder(app, cfg)
+
+        if state is None:
+            state = self._init_state(app, cfg, key)
+        t_stage = time.perf_counter() - t0
+
+        cache_key = (app.arch, app.mode, app.shape, app.smoke,
+                     id(self.mesh))
+        compiled = self._compile_cache.get(cache_key)
+        cached = compiled is not None
+        if compiled is None:
+            compiled = jax.jit(fn)
+        self._compile_cache[cache_key] = compiled
+        t_compile = time.perf_counter() - t0 - t_stage
+        return Instance(app, cfg, compiled, state,
+                        {"t_stage": t_stage, "t_compile": t_compile,
+                         "compile_cached": cached})
+
+    def _init_state(self, app: WineApp, cfg: ModelConfig, key):
+        if app.mode == "train":
+            state = init_state(key, cfg)
+            if self.mesh is not None:
+                from repro.runtime.elastic import reshard_state
+                state = reshard_state(state, self.mesh)
+            return state
+        params = lm_mod.lm_init(key, cfg)
+        if app.mode == "decode":
+            cell = self._cell(app)
+            caches = lm_mod.cache_init(cfg, cell.global_batch, cell.seq_len)
+            return (params, caches)
+        return params
+
+    def input_specs(self, app: WineApp) -> dict:
+        cfg = get_config(app.arch, smoke=app.smoke)
+        return input_specs(cfg, self._cell(app))
+
+    @staticmethod
+    def _cell(app: WineApp) -> ShapeCell:
+        cell = app.cell()
+        if app.smoke:
+            # CPU-runnable stand-in of the same mode: tiny batch/seq
+            cell = ShapeCell(cell.name, seq_len=min(cell.seq_len, 64),
+                             global_batch=min(cell.global_batch, 4),
+                             mode=cell.mode)
+        return cell

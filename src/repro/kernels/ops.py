@@ -1,0 +1,52 @@
+"""Dispatch wrappers: Pallas kernel on TPU, XLA/jnp path elsewhere.
+
+``use_pallas`` resolves to real-kernel mode only on TPU backends; the CPU
+container validates kernels through interpret=True (tests) and uses the XLA
+path for dry-run/roofline lowering (noted in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_scan as ssd
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "impl"))
+def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+              impl="auto"):
+    """q: (B,H,Sq,D), k/v: (B,K,Sk,D)."""
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "ref"
+    if impl == "pallas":
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale)
+    if impl == "interpret":
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  interpret=True)
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, A, B, C, *, chunk=128, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "ref"
+    if impl == "pallas":
+        return ssd.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    if impl == "interpret":
+        return ssd_interp(x, dt, A, B, C, chunk=chunk)
+    return _ref.ssd_ref(x, dt, A, B, C)[0]
+
+
+def ssd_interp(x, dt, A, B, C, *, chunk=128):
+    return ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  scale=None):
+    """q: (B,H,Sq,D), k/v: (B,K,Sk,D/Dv). Naive materialized attention."""
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=1)
+        v = jnp.repeat(v, H // K, axis=1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential SSM recurrence (the semantic ground truth for SSD).
+
+    x: (Bz,S,H,P), dt: (Bz,S,H), A: (H,), B/C: (Bz,S,N).
+    Returns y: (Bz,S,H,P), final state (Bz,H,P,N).
+    """
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                     # (Bz,H,P),(Bz,H),(Bz,N),(Bz,N)
+        decay = jnp.exp(dtt * A)                  # (Bz,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bz, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    h_f, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h_f

@@ -1,0 +1,87 @@
+"""Mamba2 SSD (state-space duality) Pallas TPU kernel.
+
+Grid: (batch, heads, chunks) with the chunk axis innermost — TPU grids
+execute in order, so the (P x N) state lives in VMEM scratch and carries
+across chunk steps (reset at chunk 0). Per chunk, everything is MXU-shaped:
+
+  intra-chunk dual:  scores = (C B^T) .* decay  ->  y_diag = scores @ x
+  state read:        y_off  = (C .* exp(cum))   @  state
+  state update:      state  = exp(sum dA) state + (B .* w)^T @ x
+
+The chunk width Q and head_dim P tile VMEM: q=128..256, P=64, N<=128 keeps
+the working set (Q*N + Q*P + Q*Q + P*N floats) well under the VMEM budget.
+B/C are per-group (n_groups=1): shared across heads via the index map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_sc, *, chunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_sc[...] = jnp.zeros_like(state_sc)
+
+    x = x_ref[0][:, 0, :].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0][:, 0].astype(jnp.float32)             # (Q,)
+    A = a_ref[0].astype(jnp.float32)                     # scalar per head
+    Bm = b_ref[0].astype(jnp.float32)                    # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                    # (Q, N)
+
+    dA = dt * A                                          # (Q,)
+    cum = jnp.cumsum(dA)                                 # (Q,)
+    # intra-chunk dual
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    seg = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(qi >= kj, jnp.exp(seg), 0.0)
+    scores = CB * L * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q,P)
+    # inter-chunk: read previous state
+    y += jax.lax.dot_general(Cm * jnp.exp(cum)[:, None], state_sc[...],
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,N)@(N,P->P,N)T
+    # state update
+    w = jnp.exp(cum[-1] - cum) * dt                      # (Q,)
+    new_state = jax.lax.dot_general(
+        x, Bm * w[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (P, N)
+    state_sc[...] = state_sc[...] * jnp.exp(cum[-1]) + new_state
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    """x: (Bz,S,H,P), dt: (Bz,S,H), A: (H,), B/C: (Bz,S,N) -> y (Bz,S,H,P)."""
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+    q = min(chunk, S)
+    assert S % q == 0, (S, q)
+    nc = S // q
+    grid = (Bz, H, nc)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bz, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count at first init, and the production dry-run needs 512 host
+# placeholder devices to build the 16x16 and 2x16x16 meshes.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ARCHS, SHAPES, SHAPES_BY_NAME, cell_applicable,  # noqa: E402
+                           get_config, input_specs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import roofline_from_compiled  # noqa: E402
+from repro.models import lm as lm_mod  # noqa: E402
+from repro.models.spec import ShapeCell  # noqa: E402
+from repro.sharding.partition import (batch_sharding, cache_sharding,  # noqa: E402
+                                      param_sharding, replicated,
+                                      sharding_ctx)
+from repro.train.optimizer import AdamWConfig  # noqa: E402
+from repro.train.step import init_state, make_train_step  # noqa: E402
+
+# microbatch count for train_4k, tuned from memory_analysis (EXPERIMENTS.md)
+MICROBATCHES = {
+    "internvl2-76b": 8, "deepseek-v2-236b": 8, "gemma2-27b": 4,
+    "qwen3-14b": 2, "stablelm-12b": 2, "gemma3-12b": 4, "zamba2-7b": 4,
+}
+# bf16 gradient accumulation where fp32 accumulators would not fit on chip
+ACCUM_DTYPE = {"deepseek-v2-236b": jnp.bfloat16}
+
+
+def _tree_device_bytes(shapes, shardings) -> int:
+    """Analytic bytes-per-device of a sharded pytree."""
+    total = 0
+    for sh, sp in zip(jax.tree_util.tree_leaves(shapes),
+                      jax.tree_util.tree_leaves(
+                          shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        n = 1
+        for d in sh.shape:
+            n *= d
+        shards = 1
+        mesh_shape = sp.mesh.shape
+        for axes in sp.spec:
+            if axes is None:
+                continue
+            for ax in (axes if isinstance(axes, tuple) else (axes,)):
+                shards *= mesh_shape[ax]
+        total += n * sh.dtype.itemsize // shards
+    return total
+
+
+def model_flops(cfg, cell: ShapeCell) -> float:
+    n_active = lm_mod.count_params(cfg, active_only=True)
+    if cell.mode == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.mode == "prefill":
+        return 2.0 * n_active * cell.global_batch * cell.seq_len
+    return 2.0 * n_active * cell.global_batch  # decode: one token per seq
+
+
+def build_cell(arch: str, cell: ShapeCell, mesh, smoke: bool = False):
+    """Returns (jitted, example_args, static_bytes_per_device)."""
+    cfg = get_config(arch, smoke=smoke)
+    data_specs = input_specs(cfg, cell)
+    key = jax.random.PRNGKey(0)
+
+    if cell.mode == "train":
+        mb = MICROBATCHES.get(arch, 1) if not smoke else 1
+        step = make_train_step(
+            cfg, AdamWConfig(), microbatches=mb,
+            accum_dtype=ACCUM_DTYPE.get(arch, jnp.float32))
+
+        def fn(state, batch):
+            with sharding_ctx(mesh, "train"):
+                return step(state, batch)
+
+        state_shapes = jax.eval_shape(lambda: init_state(key, cfg))
+        state_sh = param_sharding(state_shapes, mesh)
+        batch_sh = batch_sharding(data_specs, mesh, "train")
+        # donate the train state: in-place update is the steady-state truth
+        jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        static = _tree_device_bytes(state_shapes, state_sh)
+        return jitted, (state_shapes, data_specs), static
+
+    if cell.mode == "prefill":
+        def fn(params, inputs):
+            with sharding_ctx(mesh, "prefill"):
+                enc = None
+                if cfg.encoder is not None:
+                    enc = lm_mod.encoder_apply(params, inputs["frames"], cfg)
+                    inputs = {k: v for k, v in inputs.items()
+                              if k != "frames"}
+                return lm_mod.prefill(params, inputs, cfg, enc_out=enc)
+
+        param_shapes = jax.eval_shape(lambda: lm_mod.lm_init(key, cfg))
+        p_sh = param_sharding(param_shapes, mesh, mode="prefill")
+        in_sh = batch_sharding(data_specs, mesh, "prefill")
+        jitted = jax.jit(fn, in_shardings=(p_sh, in_sh))
+        static = _tree_device_bytes(param_shapes, p_sh)
+        return jitted, (param_shapes, data_specs), static
+
+    # decode
+    def fn(params, caches, inputs):
+        with sharding_ctx(mesh, "serve"):
+            logits, new_caches = lm_mod.decode_step(
+                params, caches, inputs["tokens"], inputs["positions"], cfg,
+                enc_out=inputs.get("enc_out"))
+        return logits, new_caches
+
+    param_shapes = jax.eval_shape(lambda: lm_mod.lm_init(key, cfg))
+    cache_shapes = jax.eval_shape(
+        lambda: lm_mod.cache_init(cfg, cell.global_batch, cell.seq_len))
+    p_sh = param_sharding(param_shapes, mesh, mode="serve")
+    c_sh = cache_sharding(cache_shapes, mesh, "serve")
+    in_sh = batch_sharding(data_specs, mesh, "serve")
+    # donate the caches: without donation input+output caches both live,
+    # doubling decode memory (measured +5.4 GB on internvl2 decode_32k)
+    jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, in_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+    static = (_tree_device_bytes(param_shapes, p_sh)
+              + _tree_device_bytes(cache_shapes, c_sh))
+    return jitted, (param_shapes, cache_shapes, data_specs), static
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, smoke: bool = False,
+             keep_text: bool = False) -> dict:
+    cell = SHAPES_BY_NAME[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+           "chips": chips, "status": "ok"}
+    ok, reason = cell_applicable(arch, cell)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    t0 = time.perf_counter()
+    try:
+        jitted, args, static = build_cell(arch, cell, mesh, smoke=smoke)
+        lowered = jitted.lower(*args)
+        rec["t_lower_s"] = round(time.perf_counter() - t0, 2)
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.perf_counter() - t0, 2)
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        rec["static_bytes_per_device"] = int(static)
+        rec["hbm_gb_per_device"] = round(
+            (static + rec.get("temp_size_in_bytes", 0)) / 1e9, 3)
+        cfg = get_config(arch, smoke=smoke)
+        hlo = compiled.as_text()
+        roof, coll = roofline_from_compiled(
+            compiled, model_flops(cfg, cell), chips, hlo_text=hlo)
+        rec.update({k: (round(v, 6) if isinstance(v, float) else v)
+                    for k, v in roof.row().items()})
+        rec["collectives"] = {k: [coll.count_by_kind[k], int(v)]
+                              for k, v in coll.bytes_by_kind.items()}
+        rec["params"] = lm_mod.count_params(cfg)
+        rec["params_active"] = lm_mod.count_params(cfg, active_only=True)
+        if keep_text:
+            rec["hlo_path"] = f"/tmp/hlo_{arch}_{shape}_{rec['mesh']}.txt"
+            with open(rec["hlo_path"], "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--keep-text", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = ([s.name for s in SHAPES] if args.shape == "all"
+              else args.shape.split(","))
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    out_f = open(args.out, "a") if args.out else None
+    n_fail = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mp, smoke=args.smoke,
+                               keep_text=args.keep_text)
+                line = json.dumps(rec)
+                print(line, flush=True)
+                if out_f:
+                    trace = rec.pop("trace", None)
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+                    if trace:
+                        print(trace)
+                n_fail += rec["status"] == "fail"
+    if out_f:
+        out_f.close()
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,336 @@
+"""Trip-count-aware HLO cost analysis.
+
+``jax.stages.Compiled.cost_analysis()`` visits every computation ONCE — a
+`lax.scan` over 40 layers contributes its body cost a single time, so flops /
+bytes / collective counts are understated by the trip count (we measured 49x
+on a 40-layer model). XLA's WhileLoopTripCountAnnotator stores
+``known_trip_count`` in each while's backend_config, so the exact correction
+is recoverable from the post-optimization HLO text. This module:
+
+  1. parses the module into computations and an instruction name->shape map,
+  2. classifies computations (entry / while body / fusion body / applied),
+  3. propagates execution multipliers: mult(body) = mult(parent) * trips,
+  4. accumulates, per executed computation and weighted by multiplier:
+       - dot flops (2 * result_elems * contracted_elems)
+       - HBM traffic (operand + result bytes of every materializing op;
+         fusion internals excluded — the fusion op itself carries the bytes,
+         matching HloCostAnalysis' fusion model)
+       - collective bytes by kind (operand sizes)
+
+This is the measurement instrument for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_TRIP = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+# ops that do not materialize / move HBM bytes themselves
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "after-all", "iota",
+               "partition-id", "replica-id", "call"}
+
+
+def _dtype_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes_all(text: str) -> int:
+    tot = 0
+    for dt, dims in _dtype_dims(text):
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_text: str
+    operands: List[str]
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    kind: str = "free"          # entry | body | cond | fusion | applied | free
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+    n_whiles: int = 0
+    raw_flops: float = 0.0      # un-multiplied (cost_analysis-equivalent)
+    contributors: Dict[str, float] = field(default_factory=dict)
+
+    def top(self, k: int = 15):
+        return sorted(self.contributors.items(), key=lambda kv: -kv[1])[:k]
+
+
+_OPCODE_RE = re.compile(
+    r"^(?:\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+([a-z][\w\-]*)\(")
+
+
+def _opcode_of(rhs: str) -> Optional[str]:
+    # rhs looks like: "f32[8,256]{1,0} dot(%a, %b), ..." or "(s32[], ...) while(...)"
+    m = _OPCODE_RE.match(rhs)
+    if m:
+        return m.group(1)
+    # tuple-shaped results: "(s32[], bf16[...]) while(%tuple.228), ..."
+    m = re.match(r"^\(.*\)\s+([a-z][\w\-]*)\(", rhs)
+    return m.group(1) if m else None
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Dict[str, str], str]:
+    """Returns (computations, name->result_text, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    shapes: Dict[str, str] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                    cur.kind = "entry"
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        opcode = _opcode_of(rhs)
+        if opcode is None:
+            # parameters: "%p = f32[...] parameter(0)" handled by regex above;
+            # remaining lines (e.g. string metadata) are ignored
+            if " parameter(" in rhs:
+                opcode = "parameter"
+            else:
+                continue
+        paren = rhs.find("(")
+        result_text = rhs[:paren]
+        # operand names: inside the top-level parens only
+        depth, i0, ops_text = 0, paren, ""
+        for i in range(paren, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    ops_text = rhs[paren + 1:i]
+                    break
+        operands = _OPERANDS.findall(ops_text)
+        instr = Instruction(name, opcode, result_text, operands, rhs)
+        cur.instructions.append(instr)
+        shapes[name] = result_text
+    return comps, shapes, entry
+
+
+def analyze(text: str) -> HloCost:
+    comps, shapes, entry = parse_module(text)
+
+    # classify computations + record while->body/cond/trip edges
+    while_edges: List[Tuple[str, str, str, Optional[int]]] = []
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.raw)
+                if m and m.group(1) in comps:
+                    comps[m.group(1)].kind = "fusion"
+            if "to_apply=" in ins.raw:
+                m = re.search(r"to_apply=%?([\w.\-]+)", ins.raw)
+                if m and m.group(1) in comps:
+                    comps[m.group(1)].kind = "applied"
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                mt = _TRIP.search(ins.raw)
+                trips = int(mt.group(1)) if mt else None
+                if mb:
+                    comps[mb.group(1)].kind = "body"
+                if mc:
+                    comps[mc.group(1)].kind = "cond"
+                while_edges.append((comp.name, mb.group(1) if mb else "",
+                                    mc.group(1) if mc else "",
+                                    trips))
+
+    # multipliers via fixed-point (nesting depth is small)
+    mult: Dict[str, float] = {entry: 1.0}
+    cost = HloCost()
+    for _ in range(12):
+        changed = False
+        for parent, body, cond, trips in while_edges:
+            if parent not in mult:
+                continue
+            t = trips if trips is not None else 1
+            for target, m in ((body, mult[parent] * t),
+                              (cond, mult[parent] * (t + 1))):
+                if target and mult.get(target) != m:
+                    mult[target] = m
+                    changed = True
+        if not changed:
+            break
+    cost.n_whiles = len(while_edges)
+    cost.unknown_trip_whiles = sum(1 for *_r, t in while_edges if t is None)
+
+    executed = {name: m for name, m in mult.items()
+                if name in comps and comps[name].kind in
+                ("entry", "body", "cond")}
+
+    meta_re = re.compile(r'op_name="[^"]*?/([^/"]{1,60})"')
+    slice_ops = {"dynamic-slice", "slice", "gather"}
+
+    def fusion_operand_bytes(ins: Instruction) -> float:
+        """Descend into the fusion body: a parameter consumed ONLY by
+        slice-type ops is read at slice size, not full size (the scan
+        machinery slices its stacked xs — counting full operands per
+        iteration overstates traffic by the trip count)."""
+        m_calls = re.search(r"calls=%?([\w.\-]+)", ins.raw)
+        if not m_calls or m_calls.group(1) not in comps:
+            return sum(_shape_bytes_all(shapes.get(o, ""))
+                       for o in ins.operands)
+        body = comps[m_calls.group(1)]
+        # parameter name -> param index
+        pidx = {}
+        for bi in body.instructions:
+            if bi.opcode == "parameter":
+                mnum = re.search(r"parameter\((\d+)\)", bi.raw)
+                if mnum:
+                    pidx[bi.name] = int(mnum.group(1))
+        # consumers of each parameter
+        reads = {}
+        for bi in body.instructions:
+            if bi.opcode == "parameter":
+                continue
+            for o in bi.operands:
+                if o in pidx:
+                    sz = (_shape_bytes_all(bi.result_text)
+                          if bi.opcode in slice_ops
+                          else _shape_bytes_all(shapes.get(o, "")))
+                    reads[o] = max(reads.get(o, 0), sz)
+        total = 0.0
+        for i, o in enumerate(ins.operands):
+            # map positional operand -> body parameter by order
+            total += reads.get(_param_name_for(body, i),
+                               _shape_bytes_all(shapes.get(o, "")))
+        # in-place pattern: fusion root is a DUS into a parameter -> the
+        # result buffer is aliased; traffic is the update region, not the
+        # whole array (scan ys collection lowers to exactly this)
+        rbytes = None
+        local = {b.name: b.result_text for b in body.instructions}
+        for bi in body.instructions:
+            if (bi.opcode == "dynamic-update-slice" and len(bi.operands) > 1
+                    and bi.operands[0] in pidx):
+                rbytes = _shape_bytes_all(local.get(bi.operands[1], ""))
+        return total, rbytes
+
+    def _param_name_for(body: Computation, idx: int):
+        for bi in body.instructions:
+            if bi.opcode == "parameter" and f"parameter({idx})" in bi.raw:
+                return bi.name
+        return None
+
+    for cname, m in executed.items():
+        for ins in comps[cname].instructions:
+            if ins.opcode in _SKIP_BYTES:
+                continue
+            rbytes = _shape_bytes_all(ins.result_text)
+            if ins.opcode == "fusion":
+                obytes, rb_override = fusion_operand_bytes(ins)
+                if rb_override:
+                    rbytes = rb_override
+            elif ins.opcode in slice_ops:
+                obytes = rbytes  # reads only what it returns (+indices)
+            elif ins.opcode == "dynamic-update-slice":
+                # in-place aliased update: traffic = read + write of the
+                # update region only
+                upd = (_shape_bytes_all(shapes.get(ins.operands[1], ""))
+                       if len(ins.operands) > 1 else rbytes)
+                obytes, rbytes = upd, upd
+            else:
+                obytes = sum(_shape_bytes_all(shapes.get(o, ""))
+                             for o in ins.operands)
+            cost.hbm_bytes += m * (rbytes + obytes)
+            mm = meta_re.search(ins.raw)
+            tag = (f"{ins.opcode}:{ins.result_text.strip()[:40]}"
+                   f" <{mm.group(1) if mm else ''}>")
+            cost.contributors[tag] = (cost.contributors.get(tag, 0.0)
+                                      + m * (rbytes + obytes))
+            if ins.opcode == "dot":
+                flops = _dot_flops(ins, shapes)
+                cost.flops += m * flops
+                cost.raw_flops += flops
+            if any(ins.opcode.startswith(c) for c in COLLECTIVE_OPS):
+                base = ins.opcode.replace("-start", "").replace("-done", "")
+                if ins.opcode.endswith("-done"):
+                    continue
+                cost.collective_bytes += m * obytes
+                cost.bytes_by_kind[base] = (
+                    cost.bytes_by_kind.get(base, 0.0) + m * obytes)
+                cost.count_by_kind[base] = (
+                    cost.count_by_kind.get(base, 0) + int(m))
+    return cost
+
+
+def _dot_flops(ins: Instruction, shapes: Dict[str, str]) -> float:
+    res = _dtype_dims(ins.result_text)
+    if not res:
+        return 0.0
+    r_elems = 1
+    for d in res[0][1]:
+        r_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    if not m or not ins.operands:
+        return 2.0 * r_elems  # degenerate
+    lhs_shape = _dtype_dims(shapes.get(ins.operands[0], ""))
+    if not lhs_shape:
+        return 2.0 * r_elems
+    dims = lhs_shape[0][1]
+    k = 1
+    if m.group(1):
+        for ci in m.group(1).split(","):
+            idx = int(ci)
+            if idx < len(dims):
+                k *= dims[idx]
+    return 2.0 * r_elems * k

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state. Axis semantics: `pod` = cross-pod DCN axis, `data` = batch/FSDP ICI
+axis, `model` = tensor/expert-parallel ICI axis. Shapes are configurable so
+the same rules drive larger deployments (e.g. (8,16,16) = 2048 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         pods: int = 2, data: int = 16, model: int = 16):
+    shape = (pods, data, model) if multi_pod else (data, model)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1xD (data, model) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,160 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * LINK_BW)
+
+``cost_analysis()`` on the SPMD-partitioned module reports PER-DEVICE flops
+and bytes, so terms divide by one chip's peak; collective bytes are parsed
+from the post-optimization HLO (per-device module) by summing the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+
+TPU v5e-class constants (per the brief):
+  197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+# shape token like bf16[8,128,4096]{2,1,0} or f32[] ; captures dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|collective-broadcast)"
+    r"(?:-start|-done)?\((.*)\)", )
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def add(self, kind: str, nbytes: int):
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + nbytes
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + 1
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in a post-optimization module."""
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _result_ty, kind, operands = m.group(1), m.group(2), m.group(3)
+        if "-done" in line.split("=")[1].split("(")[0]:
+            continue  # count async pairs once (at -start)
+        shapes = _SHAPE_RE.findall(operands)
+        if shapes:
+            nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        else:
+            # operands printed without inline types: fall back to result shape
+            rshapes = _SHAPE_RE.findall(m.group(1))
+            nbytes = sum(_shape_bytes(dt, dims) for dt, dims in rshapes)
+        stats.add(kind, nbytes)
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops: float = 0.0
+    chips: int = 1
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        """No-overlap upper bound is sum; perfectly-overlapped bound is max.
+        We report max (the roofline) and track sum separately."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-chip-normalized)."""
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / self.chips / self.flops
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-flops utilization at the roofline step time."""
+        if self.t_step <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.t_step) / PEAK_FLOPS
+
+    def row(self) -> dict:
+        return {
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bound": self.bound,
+            "t_step": self.t_step, "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound,
+            "flops_per_chip": self.flops, "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.collective_bytes,
+        }
+
+
+def roofline_from_compiled(compiled, model_flops: float, chips: int,
+                           hlo_text: str = None):
+    """Trip-count-aware roofline. Returns (Roofline, HloCost).
+
+    Raw ``cost_analysis()`` numbers count each scan body once (XLA visits
+    every computation a single time); we therefore derive flops/bytes/
+    collectives from the post-optimization HLO with while-loop trip-count
+    weighting (see hlo_analysis.py) and keep the raw numbers for reference.
+    """
+    from repro.launch.hlo_analysis import analyze
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = analyze(text)
+    return Roofline(flops=hc.flops, hbm_bytes=hc.hbm_bytes,
+                    collective_bytes=hc.collective_bytes,
+                    model_flops=model_flops, chips=chips), hc

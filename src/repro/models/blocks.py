@@ -1,0 +1,179 @@
+"""Residual blocks and scan groups.
+
+A group's repeated pattern is scanned with ``jax.lax.scan`` over stacked
+parameters — compile time is O(|pattern|), not O(layers). Blocks marked
+``shared`` keep one un-stacked parameter set passed into the scan body as a
+closed-over capture, so Zamba2-style weight sharing is exact (same arrays
+every repeat).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_cache_init, attn_init, gqa_encoder_kv
+from repro.models.layers import norm_apply, norm_init
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.spec import BlockSpec, ModelConfig, ScanGroup
+from repro.models.ssm import ssm_apply, ssm_cache_init, ssm_init
+from repro.sharding.partition import constrain
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, b: BlockSpec) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    dt = jnp.bfloat16
+    p: dict = {}
+    if b.attn is not None:
+        p["norm_attn"] = norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt)
+        p["attn"] = attn_init(next(ks), cfg.d_model, b.attn, cfg)
+        if b.post_norms:
+            p["post_attn"] = norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt)
+    if b.ssm is not None:
+        p["norm_ssm"] = norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt)
+        p["ssm"] = ssm_init(next(ks), cfg.d_model, b.ssm, cfg)
+    if b.cross_attn is not None:
+        p["norm_cross"] = norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt)
+        p["cross"] = attn_init(next(ks), cfg.d_model, b.cross_attn, cfg)
+    if b.mlp is not None:
+        if not b.parallel_residual:
+            p["norm_mlp"] = norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt)
+        p["mlp"] = mlp_init(next(ks), cfg.d_model, b.mlp, cfg)
+        if b.post_norms:
+            p["post_mlp"] = norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt)
+    if b.moe is not None:
+        p["norm_moe"] = norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt)
+        p["moe"] = moe_init(next(ks), cfg.d_model, b.moe, cfg)
+    return p
+
+
+def block_apply(p: dict, x: jax.Array, b: BlockSpec, cfg: ModelConfig,
+                positions: jax.Array, cache: Optional[dict] = None,
+                enc_out: Optional[jax.Array] = None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    nk, ne = cfg.norm, cfg.norm_eps
+    c_attn = cache.get("attn") if cache else None
+    c_ssm = cache.get("ssm") if cache else None
+
+    if b.parallel_residual:
+        h = norm_apply(p["norm_attn"], x, nk, ne)
+        a, nc = attn_apply(p["attn"], h, b.attn, cfg, positions, cache=c_attn)
+        m = mlp_apply(p["mlp"], h, b.mlp)
+        x = x + a + m
+        new_cache["attn"] = nc
+        return constrain(x, "batch", "seq", "act_d"), new_cache, aux
+
+    if b.attn is not None:
+        h = norm_apply(p["norm_attn"], x, nk, ne)
+        a, nc = attn_apply(p["attn"], h, b.attn, cfg, positions, cache=c_attn)
+        if b.post_norms:
+            a = norm_apply(p["post_attn"], a, nk, ne)
+        x = constrain(x + a, "batch", "seq", "act_d")
+        new_cache["attn"] = nc
+
+    if b.ssm is not None:
+        h = norm_apply(p["norm_ssm"], x, nk, ne)
+        s, nc = ssm_apply(p["ssm"], h, b.ssm, cfg, positions, cache=c_ssm)
+        x = constrain(x + s, "batch", "seq", "act_d")
+        new_cache["ssm"] = nc
+
+    if b.cross_attn is not None:
+        h = norm_apply(p["norm_cross"], x, nk, ne)
+        kv = gqa_encoder_kv(p["cross"], enc_out, b.cross_attn)
+        a, _ = attn_apply(p["cross"], h, b.cross_attn, cfg, positions,
+                          encoder_out=kv)
+        x = constrain(x + a, "batch", "seq", "act_d")
+
+    if b.mlp is not None:
+        h = norm_apply(p["norm_mlp"], x, nk, ne)
+        m = mlp_apply(p["mlp"], h, b.mlp)
+        if b.post_norms:
+            m = norm_apply(p["post_mlp"], m, nk, ne)
+        x = constrain(x + m, "batch", "seq", "act_d")
+
+    if b.moe is not None:
+        h = norm_apply(p["norm_moe"], x, nk, ne)
+        m, a_loss = moe_apply(p["moe"], h, b.moe)
+        aux = aux + a_loss
+        x = constrain(x + m, "batch", "seq", "act_d")
+
+    return x, new_cache, aux
+
+
+def block_cache_init(cfg: ModelConfig, b: BlockSpec, batch: int,
+                     capacity: int) -> dict:
+    c: dict = {}
+    if b.attn is not None:
+        c["attn"] = attn_cache_init(batch, capacity, b.attn)
+    if b.ssm is not None:
+        c["ssm"] = ssm_cache_init(batch, cfg.d_model, b.ssm)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Scan group
+# ---------------------------------------------------------------------------
+
+def group_init(key, cfg: ModelConfig, g: ScanGroup) -> dict:
+    stacked, shared = {}, {}
+    keys = jax.random.split(key, len(g.pattern))
+    for i, b in enumerate(g.pattern):
+        if b.shared:
+            shared[str(i)] = block_init(keys[i], cfg, b)
+        elif g.repeats == 1:
+            stacked[str(i)] = jax.tree_util.tree_map(
+                lambda a: a[None], block_init(keys[i], cfg, b))
+        else:
+            ks = jax.random.split(keys[i], g.repeats)
+            stacked[str(i)] = jax.vmap(
+                lambda k, b=b: block_init(k, cfg, b))(ks)
+    return {"stacked": stacked, "shared": shared}
+
+
+def group_cache_init(cfg: ModelConfig, g: ScanGroup, batch: int,
+                     capacity: int) -> dict:
+    per_block = {str(i): block_cache_init(cfg, b, batch, capacity)
+                 for i, b in enumerate(g.pattern)}
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (g.repeats,) + a.shape).copy()
+        if g.repeats > 1 else a[None], per_block)
+
+
+def group_apply(gp: dict, x: jax.Array, g: ScanGroup, cfg: ModelConfig,
+                positions: jax.Array, caches: Optional[dict] = None,
+                enc_out: Optional[jax.Array] = None, remat: bool = False):
+    """Scan the pattern over repeats. Returns (x, new_caches, aux_sum)."""
+    shared = gp["shared"]
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        x = carry
+        sp, cache_slice = xs if has_cache else (xs, None)
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, b in enumerate(g.pattern):
+            pi = shared[str(i)] if b.shared else sp[str(i)]
+            ci = cache_slice.get(str(i)) if cache_slice is not None else None
+            x, nc, a = block_apply(pi, x, b, cfg, positions, cache=ci,
+                                   enc_out=enc_out)
+            new_caches[str(i)] = nc
+            aux = aux + a
+        out = (new_caches, aux) if has_cache else aux
+        return x, out
+
+    body_fn = jax.checkpoint(body) if remat else body
+    xs = (gp["stacked"], caches) if has_cache else gp["stacked"]
+    x, ys = jax.lax.scan(body_fn, x, xs)
+    if has_cache:
+        new_caches, auxs = ys
+    else:
+        new_caches, auxs = None, ys
+    return x, new_caches, auxs.sum()

@@ -1,0 +1,107 @@
+"""Primitive layers: norms, embeddings, rotary embeddings, init helpers.
+
+Functional style: ``*_init(key, ...) -> params`` (nested dicts of arrays) and
+pure ``*_apply(params, x, ...)``. All initializers are traceable so the whole
+model can be built under ``jax.eval_shape`` for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, std, dtype):
+    return (std * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def fan_in_init(key, shape, fan_in, dtype):
+    return normal_init(key, shape, 1.0 / np.sqrt(max(fan_in, 1)), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, use_bias: bool, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if kind == "layernorm" and use_bias:
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def norm_apply(params: dict, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def head_rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the trailing head_dim (qk-norm). scale: (head_dim,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"embedding": normal_init(key, (vocab, d), 0.02, dtype)}
+
+
+def embed_lookup(params: dict, tokens: jax.Array) -> jax.Array:
+    # one-hot matmul is the MXU-native gather for vocab-sharded tables, but a
+    # plain take lowers to a sharded gather which XLA handles well; keep take.
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def embed_logits(params: dict, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, params["embedding"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, rope_pct: float) -> jax.Array:
+    """Inverse frequencies for the rotating fraction of head_dim."""
+    rot = int(head_dim * rope_pct)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rope_pct: float = 1.0) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    rot = int(d * rope_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_freqs(d, theta, rope_pct)                      # (rot/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv      # (..., S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:                          # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(x1.shape[:-1] + (rot,))
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1) if rot < d else yr.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,241 @@
+"""Full models: decoder-only LM (dense/MoE/SSM/hybrid/VLM) and enc-dec.
+
+Public surface (all pure functions — the Wine ABI wraps exactly these):
+  lm_init(key, cfg)                                  -> params
+  lm_hidden(params, inputs, cfg, caches=None, ...)   -> (hidden, caches, aux)
+  lm_logits(params, hidden, cfg)                     -> logits
+  lm_loss(params, batch, cfg, remat=True)            -> (loss, metrics)
+  prefill(params, inputs, cfg, capacity)             -> (last_logits, caches)
+  decode_step(params, caches, tokens, pos, cfg)      -> (logits, caches)
+  cache_init(cfg, batch, capacity)                   -> caches
+  count_params(cfg, active_only=False)               -> int
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (block_cache_init, group_apply,
+                                 group_cache_init, group_init)
+from repro.models.layers import (embed_init, embed_logits, embed_lookup,
+                                 norm_apply, norm_init, normal_init, softcap)
+from repro.models.spec import ModelConfig
+from repro.sharding.partition import constrain
+
+LOSS_CHUNK = 512          # sequence chunk for the vocab-sharded CE loss
+IGNORE = -100
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def lm_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4 + len(cfg.groups))
+    dt = jnp.bfloat16
+    p: dict = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt),
+        "groups": [group_init(ks[4 + i], cfg, g)
+                   for i, g in enumerate(cfg.groups)],
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"lm_head": normal_init(
+            ks[1], (cfg.d_model, cfg.vocab), 0.02, dt)}
+    if cfg.learned_pos:
+        p["pos"] = {"pos_embed": normal_init(
+            ks[2], (cfg.max_pos, cfg.d_model), 0.02, dt)}
+    if cfg.encoder is not None:
+        enc = cfg.encoder
+        eks = jax.random.split(ks[3], 2 + len(enc.groups))
+        p["encoder"] = {
+            "groups": [group_init(eks[2 + i], cfg, g)
+                       for i, g in enumerate(enc.groups)],
+            "final_norm": norm_init(cfg.d_model, cfg.norm, cfg.use_bias, dt),
+            "pos": {"pos_embed": normal_init(
+                eks[0], (enc.seq_len, cfg.d_model), 0.02, dt)},
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def encoder_apply(params: dict, frames: jax.Array, cfg: ModelConfig,
+                  remat: bool = False) -> jax.Array:
+    """frames: (B, S_enc, D) stubbed frontend embeddings."""
+    enc = params["encoder"]
+    x = frames + enc["pos"]["pos_embed"][None, : frames.shape[1]]
+    x = constrain(x, "batch", "seq", "act_d")
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1], dtype=jnp.int32)[None],
+                           frames.shape[:2])
+    for gi, g in enumerate(cfg.encoder.groups):
+        x, _, _ = group_apply(enc["groups"][gi], x, g, cfg, pos, remat=remat)
+    return norm_apply(enc["final_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def _embed_inputs(params, inputs, cfg):
+    tokens = inputs["tokens"]
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.frontend == "vlm_patch" and "embeds" in inputs:
+        x = jnp.concatenate([inputs["embeds"].astype(x.dtype), x], axis=1)
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+    if cfg.learned_pos:
+        x = x + jnp.take(params["pos"]["pos_embed"], positions, axis=0)
+    return x, positions
+
+
+def lm_hidden(params: dict, inputs: dict, cfg: ModelConfig,
+              caches: Optional[list] = None, enc_out: Optional[jax.Array] = None,
+              remat: bool = False):
+    """Returns (hidden, new_caches, aux)."""
+    x, positions = _embed_inputs(params, inputs, cfg)
+    x = constrain(x, "batch", "seq", "act_d")
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = [] if caches is not None else None
+    for gi, g in enumerate(cfg.groups):
+        c = caches[gi] if caches is not None else None
+        x, nc, a = group_apply(params["groups"][gi], x, g, cfg, positions,
+                               caches=c, enc_out=enc_out, remat=remat)
+        aux = aux + a
+        if new_caches is not None:
+            new_caches.append(nc)
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return x, new_caches, aux
+
+
+def lm_logits(params: dict, hidden: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = embed_logits(params["embed"], hidden)
+    else:
+        logits = jnp.einsum("...d,dv->...v", hidden,
+                            params["lm_head"]["lm_head"])
+    if cfg.final_logit_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence — never materializes (B,S,V) at once)
+# ---------------------------------------------------------------------------
+
+def _ce_chunk(params, h, labels, cfg):
+    logits = lm_logits(params, h, cfg).astype(jnp.float32)
+    mask = labels != IGNORE
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.where(mask, lse - gold, 0.0)
+    return ce.sum(), mask.sum()
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig, remat: bool = True,
+            enc_out: Optional[jax.Array] = None):
+    """batch: {tokens (B,S), labels (B,S), [embeds], [frames]}."""
+    if cfg.encoder is not None and enc_out is None:
+        enc_out = encoder_apply(params, batch["frames"], cfg, remat=remat)
+    h, _, aux = lm_hidden(params, batch, cfg, enc_out=enc_out, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vlm_patch" and "embeds" in batch:
+        pad = jnp.full(batch["embeds"].shape[:2], IGNORE, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+
+    S = h.shape[1]
+    chunk = min(LOSS_CHUNK, S)
+    if S % chunk == 0 and S > chunk:
+        n = S // chunk
+        hc = h.reshape(h.shape[0], n, chunk, -1).transpose(1, 0, 2, 3)
+        lc = labels.reshape(labels.shape[0], n, chunk).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            tot, cnt = carry
+            hh, ll = xs
+            s, c = _ce_chunk(params, hh, ll, cfg)
+            return (tot + s, cnt + c), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(body) if remat else body,
+            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, lc))
+    else:
+        tot, cnt = _ce_chunk(params, h, labels, cfg)
+    ce = tot / jnp.maximum(cnt, 1)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg: ModelConfig, batch: int, capacity: int) -> list:
+    return [group_cache_init(cfg, g, batch, capacity) for g in cfg.groups]
+
+
+def prefill(params: dict, inputs: dict, cfg: ModelConfig,
+            enc_out: Optional[jax.Array] = None,
+            capacity: Optional[int] = None):
+    """Full-sequence forward; returns (last-token logits, filled caches).
+
+    ``capacity`` sizes the KV ring buffers (>= prompt + planned decode
+    length); defaults to the prompt length.
+    """
+    x, positions = _embed_inputs(params, inputs, cfg)
+    x = constrain(x, "batch", "seq", "act_d")
+    B, S = x.shape[:2]
+    capacity = max(capacity or S, S)
+    caches = []
+    for gi, g in enumerate(cfg.groups):
+        c = group_cache_init(cfg, g, B, capacity)
+        x, nc, _ = group_apply(params["groups"][gi], x, g, cfg, positions,
+                               caches=c, enc_out=enc_out)
+        caches.append(nc)
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = lm_logits(params, x[:, -1:], cfg)
+    return logits, caches
+
+
+def decode_step(params: dict, caches: list, tokens: jax.Array,
+                pos: jax.Array, cfg: ModelConfig,
+                enc_out: Optional[jax.Array] = None):
+    """tokens: (B,1) int32, pos: (B,1) absolute position. One new token."""
+    inputs = {"tokens": tokens, "positions": pos}
+    h, new_caches, _ = lm_hidden(params, inputs, cfg, caches=caches,
+                                 enc_out=enc_out)
+    logits = lm_logits(params, h, cfg)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (via eval_shape on init — no allocation, no formulas)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), cfg))
+    total = 0
+
+    def add(path, leaf):
+        nonlocal total
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if active_only:
+            names = [str(getattr(p, "key", "")) for p in path]
+            if any(nm.startswith("we_") for nm in names):
+                for g in cfg.groups:
+                    for b in g.pattern:
+                        if b.moe is not None:
+                            n = int(n * b.moe.top_k / b.moe.n_experts)
+                            break
+        total += n
+
+    jax.tree_util.tree_map_with_path(add, shapes)
+    return total

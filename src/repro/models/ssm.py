@@ -1,0 +1,208 @@
+"""Mamba2 (state-space duality) mixer.
+
+Train/prefill uses the chunked SSD algorithm: intra-chunk attention-dual
+matmuls (MXU-shaped, chunk x chunk) + an inter-chunk state recurrence scanned
+over chunk index. Decode is the O(1) recurrent update. Projections are kept
+as separate weights (x/z/B/C/dt) rather than one fused matrix so every shard
+boundary falls on a clean logical axis — mathematically identical to the
+fused upstream layout.
+
+The Pallas kernel in ``repro.kernels.ssd_scan`` implements the intra-chunk
+dual; this module is the XLA path and the numerical reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import fan_in_init, normal_init
+from repro.models.spec import ModelConfig, SsmSpec
+from repro.sharding.partition import constrain
+
+_SSM_CACHE_AXES = {
+    "conv_x": ("cache_batch", None, "d_inner"),
+    "conv_B": ("cache_batch", None, "state"),
+    "conv_C": ("cache_batch", None, "state"),
+    "state": ("cache_batch", "ssm_heads", "head_dim", "state"),
+}
+
+
+def _constrain_cache(cache: dict) -> dict:
+    return {k: constrain(v, *_SSM_CACHE_AXES[k]) for k, v in cache.items()}
+
+
+def ssm_dims(d_model: int, spec: SsmSpec):
+    d_inner = spec.expand * d_model
+    n_heads = d_inner // spec.head_dim
+    return d_inner, n_heads
+
+
+def ssm_init(key, d_model: int, spec: SsmSpec, cfg: ModelConfig) -> dict:
+    d_inner, H = ssm_dims(d_model, spec)
+    G, N = spec.n_groups, spec.d_state
+    ks = jax.random.split(key, 9)
+    dt = jnp.bfloat16
+    return {
+        "w_x": fan_in_init(ks[0], (d_model, d_inner), d_model, dt),
+        "w_z": fan_in_init(ks[1], (d_model, d_inner), d_model, dt),
+        "w_B": fan_in_init(ks[2], (d_model, G * N), d_model, dt),
+        "w_C": fan_in_init(ks[3], (d_model, G * N), d_model, dt),
+        "w_dt": fan_in_init(ks[4], (d_model, H), d_model, dt),
+        "conv_x": normal_init(ks[5], (spec.d_conv, d_inner), 0.1, dt),
+        "conv_B": normal_init(ks[6], (spec.d_conv, G * N), 0.1, dt),
+        "conv_C": normal_init(ks[7], (spec.d_conv, G * N), 0.1, dt),
+        "conv_bias_x": jnp.zeros((d_inner,), dt),
+        "conv_bias_B": jnp.zeros((G * N,), dt),
+        "conv_bias_C": jnp.zeros((G * N,), dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dt),
+        "w_out": fan_in_init(ks[8], (d_inner, d_model), d_inner, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C) -> (B,S,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _gated_norm(scale, y, z, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32))
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan (pure jnp reference / XLA path).
+
+    xh: (B,S,H,P)  dt: (B,S,H)  A: (H,)  Bm/Cm: (B,S,N) (n_groups=1).
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    xc = xh.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    dA = dtc * A                                               # (B,nc,Q,H)
+    cum = jnp.cumsum(dA, axis=2)                               # decay to chunk start
+    # intra-chunk dual: scores[q,p] = C_q.B_p * exp(cum_q - cum_p) * dt_p, q>=p
+    CB = jnp.einsum("bcqn,bcpn->bcqp", Cc, Bc)                 # (B,nc,Q,Q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = CB[..., None] * L * dtc[:, :, None, :, :]         # (B,nc,Qq,Qp,H)
+    y_diag = jnp.einsum("bcqph,bcphv->bcqhv", scores, xc)
+
+    # chunk-boundary states
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhv->bchvn",
+                        Bc, decay_out * dtc, xc)               # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                 # (B,nc,H)
+
+    def step(h, xs):
+        s_c, d_c = xs
+        h_new = h * d_c[:, :, None, None] + s_c
+        return h_new, h                                        # emit state at chunk START
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_final, h_starts = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcqn,bcqh,bchvn->bcqhv",
+                       Cc, jnp.exp(cum), h_starts)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def ssm_cache_init(batch: int, d_model: int, spec: SsmSpec) -> dict:
+    d_inner, H = ssm_dims(d_model, spec)
+    GN = spec.n_groups * spec.d_state
+    return {
+        "conv_x": jnp.zeros((batch, spec.d_conv - 1, d_inner), jnp.bfloat16),
+        "conv_B": jnp.zeros((batch, spec.d_conv - 1, GN), jnp.bfloat16),
+        "conv_C": jnp.zeros((batch, spec.d_conv - 1, GN), jnp.bfloat16),
+        "state": jnp.zeros((batch, H, spec.head_dim, spec.d_state), jnp.float32),
+    }
+
+
+def ssm_apply(params: dict, x: jax.Array, spec: SsmSpec, cfg: ModelConfig,
+              positions, cache: Optional[dict] = None,
+              encoder_out=None):
+    """x: (B,S,D) -> (y, new_cache)."""
+    B, S, D = x.shape
+    d_inner, H = ssm_dims(D, spec)
+    P, N = spec.head_dim, spec.d_state
+    A = -jnp.exp(params["A_log"])
+
+    xz = constrain(jnp.einsum("bsd,de->bse", x, params["w_x"]),
+                   "batch", "seq", "d_inner")
+    z = constrain(jnp.einsum("bsd,de->bse", x, params["w_z"]),
+                  "batch", "seq", "d_inner")
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["w_C"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])
+
+    if cache is not None and S == 1:
+        # ---- decode: O(1) recurrence
+        def roll(c, new):
+            return jnp.concatenate([c[:, 1:], new], axis=1)
+        hist_x = jnp.concatenate([cache["conv_x"], xz], axis=1)
+        hist_B = jnp.concatenate([cache["conv_B"], Bm], axis=1)
+        hist_C = jnp.concatenate([cache["conv_C"], Cm], axis=1)
+        cx = jax.nn.silu((hist_x * params["conv_x"][None]).sum(1)
+                         + params["conv_bias_x"])               # (B,d_inner)
+        cB = jax.nn.silu((hist_B * params["conv_B"][None]).sum(1)
+                         + params["conv_bias_B"])
+        cC = jax.nn.silu((hist_C * params["conv_C"][None]).sum(1)
+                         + params["conv_bias_C"])
+        xh = cx.reshape(B, H, P).astype(jnp.float32)
+        dt1 = dt[:, 0]                                          # (B,H)
+        decay = jnp.exp(dt1 * A)                                # (B,H)
+        h = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhv,bn->bhvn", dt1, xh, cB.astype(jnp.float32))
+        y = jnp.einsum("bn,bhvn->bhv", cC.astype(jnp.float32), h)
+        y = y + params["D"][None, :, None] * xh
+        y = y.reshape(B, 1, d_inner)
+        new_cache = _constrain_cache({
+            "conv_x": roll(cache["conv_x"], xz),
+            "conv_B": roll(cache["conv_B"], Bm),
+            "conv_C": roll(cache["conv_C"], Cm),
+            "state": h,
+        })
+    else:
+        # ---- train / prefill: chunked SSD
+        cx = jax.nn.silu(_causal_conv(xz, params["conv_x"], params["conv_bias_x"]))
+        cB = jax.nn.silu(_causal_conv(Bm, params["conv_B"], params["conv_bias_B"]))
+        cC = jax.nn.silu(_causal_conv(Cm, params["conv_C"], params["conv_bias_C"]))
+        xh = cx.reshape(B, S, H, P)
+        y, h_final = ssd_chunked(xh, dt, A, cB, cC, spec.chunk)
+        y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, d_inner)
+        if cache is not None:
+            new_cache = _constrain_cache({
+                "conv_x": xz[:, -(spec.d_conv - 1):],
+                "conv_B": Bm[:, -(spec.d_conv - 1):],
+                "conv_C": Cm[:, -(spec.d_conv - 1):],
+                "state": h_final,
+            })
+        else:
+            new_cache = None
+
+    y = _gated_norm(params["norm"], y, z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["w_out"])
+    return out, new_cache

@@ -1,0 +1,45 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+int8 symmetric quantization with error feedback (residual carried in fp32).
+In this framework the hook is applied to the gradient tree inside train_step
+(``grad_transform``); on a real deployment the same transform brackets the
+`pod`-axis all-reduce so DCN bytes drop 4x (bf16->int8). Error feedback keeps
+the update unbiased over time (Seide et al. / Karimireddy et al.).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Returns (decompressed grads as seen post-allreduce, new error state)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s)
+        return deq, corrected - deq
+
+    pairs = jax.tree_util.tree_map(one, grads, error)
+    out = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+    return out, new_err

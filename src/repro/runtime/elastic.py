@@ -1,0 +1,30 @@
+"""Elastic scaling: re-shard any checkpoint onto a different mesh.
+
+A job checkpointed on mesh A (say 2x16x16) restarts on mesh B (16x16, or a
+degraded 16x15-equivalent replacement pod): ``reshard_state`` recomputes the
+NamedSharding tree for the new mesh from the same logical rules and places
+the restored arrays. No layout metadata is stored in the checkpoint — the
+logical-axis rules ARE the layout, so any mesh the rules can resolve against
+is a valid restore target.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding.partition import param_sharding
+
+
+def state_sharding(state: Any, mesh: Mesh) -> Any:
+    """Sharding tree for a full train state (params + adam moments)."""
+    shaped = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    return param_sharding(shaped, mesh)
+
+
+def reshard_state(state: Any, mesh: Mesh) -> Any:
+    """Place an (addressable) state pytree onto a new mesh."""
+    shard_tree = state_sharding(state, mesh)
+    return jax.tree_util.tree_map(jax.device_put, state, shard_tree)

@@ -1,0 +1,90 @@
+"""GPipe-style pipeline parallelism over a mesh axis via shard_map+ppermute.
+
+The shipped configs use the `pod` axis for data parallelism (at 2 pods the
+DP bubble is strictly smaller than PP's — DESIGN.md §4); this module is the
+PP alternative a deployment can flip to per config: stages are laid out
+along a mesh axis, activations flow stage-to-stage with
+``jax.lax.ppermute``, and microbatches fill the pipe (bubble fraction
+(S-1)/(M+S-1) for S stages, M microbatches).
+
+Forward-only reference implementation with tests; the train-step variant
+composes with ``jax.grad`` through the shard_map (collective transpose is
+ppermute in the reverse direction, which jax derives automatically).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
+                   axis: str = "pod", microbatches: int = 4):
+    """Run ``stage_fn(stage_params, x)`` as a pipeline along ``axis``.
+
+    params_stacked: pytree with leading axis == n_stages (stage s holds its
+    own slice). x: (B, ...) global batch; microbatches must divide B.
+    Returns y with the same shape as x (as produced by the last stage).
+    """
+    n_stages = mesh.shape[axis]
+    B = x.shape[0]
+    assert B % microbatches == 0
+    mb = B // microbatches
+
+    def per_stage(params, x_local):
+        # params: this stage's slice (leading axis removed by shard_map)
+        params = jax.tree_util.tree_map(lambda a: a[0], params)
+        stage = jax.lax.axis_index(axis)
+
+        # schedule: M microbatches + (S-1) drain ticks
+        ticks = microbatches + n_stages - 1
+        xs = x_local.reshape(microbatches, mb, *x_local.shape[1:])
+        xs = jnp.concatenate(
+            [xs, jnp.zeros((n_stages - 1,) + xs.shape[1:], xs.dtype)], 0)
+        out = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, out = carry
+            # stage 0 ingests microbatch t; others use what arrived
+            mb_in = jnp.where(stage == 0,
+                              xs[jnp.minimum(t, ticks - 1)], buf)
+            y = stage_fn(params, mb_in)
+            # pass to the next stage (ring; last stage's send is unused)
+            buf_next = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            # last stage emits microbatch t-(S-1)
+            emit_idx = t - (n_stages - 1)
+            out = jax.lax.cond(
+                emit_idx >= 0,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(emit_idx, 0), 0),
+                lambda o: o, out)
+            return (buf_next, out)
+
+        buf0 = jnp.zeros((mb,) + x_local.shape[1:], x_local.dtype)
+        _, out = jax.lax.fori_loop(0, ticks, tick, (buf0, out))
+        # only the final stage holds the pipeline output; make it replicated
+        out = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out)), axis)
+        return out[:microbatches].reshape(x_local.shape)
+
+    spec_params = jax.tree_util.tree_map(lambda _: P(axis), params_stacked)
+    fn = shard_map(per_stage, mesh=mesh,
+                   in_specs=(spec_params, P()),
+                   out_specs=P(),
+                   check_rep=False)
+    y = fn(params_stacked, x)
+    return y
+
+
+def reference_apply(stage_fn: Callable, params_stacked, x):
+    """Sequential reference: apply every stage in order (no pipeline)."""
+    n_stages = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
+    for s in range(n_stages):
+        p = jax.tree_util.tree_map(lambda a: a[s], params_stacked)
+        x = stage_fn(p, x)
+    return x

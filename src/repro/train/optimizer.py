@@ -1,0 +1,98 @@
+"""AdamW from scratch (no optax in this environment).
+
+Parameters are stored bf16; moments are fp32 and inherit the parameter
+sharding (so optimizer memory is 256-way sharded exactly like the weights —
+ZeRO-style by construction). The update is computed in fp32 and cast back.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    t = (s - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def _decay_mask(path) -> bool:
+    """Apply weight decay only to matrices (not norms/biases/scalars)."""
+    name = ""
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = str(p.key)
+            break
+    return not (name.startswith(("norm", "scale", "bias", "b_", "post_",
+                                 "dt_bias", "A_log", "D", "q_norm", "k_norm",
+                                 "kv_norm", "final_norm", "conv_bias")))
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: dict,
+                 grad_transform=None):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    if grad_transform is not None:
+        grads = grad_transform(grads)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        delta = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree_util.tree_map_with_path(
+        upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

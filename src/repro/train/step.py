@@ -1,0 +1,78 @@
+"""Distributed train/serve step builders.
+
+``make_train_step(cfg, opt)`` returns a pure ``(state, batch) -> (state,
+metrics)`` suitable for ``jax.jit`` with NamedSharding in/out specs. Gradient
+accumulation over microbatches is a ``lax.scan`` so activation live-range is
+one microbatch; remat (scan-over-layers checkpointing) bounds it further to
+one block.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import lm_init, lm_loss
+from repro.models.spec import ModelConfig
+from repro.sharding.partition import constrain
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def init_state(key, cfg: ModelConfig) -> dict:
+    params = lm_init(key, cfg)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None,
+                    remat: bool = True,
+                    accum_dtype=jnp.float32) -> Callable:
+    """Build train_step(state, batch) -> (state, metrics).
+
+    ``accum_dtype``: dtype of the microbatch gradient accumulator. bf16
+    halves the accumulator footprint (the lever that fits deepseek-v2-236b
+    on 256 chips); fp32 is the default and is bit-equivalent to single-shot.
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = lm_loss(params, mb, cfg, remat=remat)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                mb = jax.tree_util.tree_map(
+                    lambda x: constrain(x, "batch", *([None] * (x.ndim - 1))),
+                    mb)
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_body, (zero, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+
+        new_params, new_opt, om = adamw_update(
+            opt, params, grads, state["opt"], grad_transform=grad_transform)
+        metrics = dict(metrics, loss=loss, **om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+
+# keep tests single-device (the dry-run sets its own 512-device flag in its
+# own process); cap compilation parallelism for container stability
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

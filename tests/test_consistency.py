@@ -1,0 +1,103 @@
+"""Decode-vs-full-forward equivalence: validates KV ring buffers, windowed
+caches, MLA weight absorption, and the SSD chunked<->recurrent duality."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.lm import decode_step, lm_hidden, lm_init, lm_logits, prefill
+
+S, B, TAIL = 24, 2, 4
+
+DECODER_ARCHS = [a for a in ARCHS if a != "whisper-base"]
+
+
+def _uncapped(cfg):
+    """MoE capacity drops are data-dependent (full forward drops overflow
+    tokens; 1-token decode cannot) — equivalence tests lift the cap."""
+    groups = []
+    for g in cfg.groups:
+        pat = []
+        for b in g.pattern:
+            if b.moe is not None:
+                b = dataclasses.replace(b, moe=dataclasses.replace(
+                    b.moe, capacity_factor=float(b.moe.n_experts)))
+            pat.append(b)
+        groups.append(dataclasses.replace(g, pattern=tuple(pat)))
+    return dataclasses.replace(cfg, groups=tuple(groups))
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = _uncapped(get_config(arch, smoke=True))
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    inputs = {"tokens": toks}
+    if cfg.frontend == "vlm_patch":
+        emb = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.frontend_len, cfg.d_model),
+            jnp.bfloat16)
+        inputs["embeds"] = emb
+
+    h, _, _ = lm_hidden(params, inputs, cfg)
+    full = lm_logits(params, h, cfg).astype(jnp.float32)
+
+    sp = S - TAIL
+    pre_inputs = dict(inputs, tokens=toks[:, :sp])
+    lg, caches = prefill(params, pre_inputs, cfg,
+                         capacity=S + (cfg.frontend_len or 0))
+    outs = [lg]
+    dstep = jax.jit(lambda p, c, t, po: decode_step(p, c, t, po, cfg))
+    off = cfg.frontend_len if cfg.frontend == "vlm_patch" else 0
+    for i in range(sp, S):
+        lg, caches = dstep(params, caches, toks[:, i:i + 1],
+                           jnp.full((B, 1), i + off, jnp.int32))
+        outs.append(lg)
+    dec = jnp.concatenate(outs[:-1], axis=1).astype(jnp.float32)
+    ref = full[:, sp - 1 + off:S - 1 + off]
+    err = float(jnp.abs(dec - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert err < 0.05, f"{arch}: decode/full mismatch rel={err:.3e}"
+
+
+def test_ssd_chunk_sizes_agree():
+    """Chunked SSD must be invariant to chunk size (algebraic identity)."""
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(0)
+    Bz, Sq, H, P, N = 2, 64, 4, 16, 8
+    x = jax.random.normal(key, (Bz, Sq, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (Bz, Sq, H)))
+    A = -jnp.exp(0.3 * jax.random.normal(jax.random.PRNGKey(2), (H,)))
+    Bm = jax.random.normal(jax.random.PRNGKey(3), (Bz, Sq, N))
+    Cm = jax.random.normal(jax.random.PRNGKey(4), (Bz, Sq, N))
+    y16, h16 = ssd_chunked(x, dt, A, Bm, Cm, 16)
+    y64, h64 = ssd_chunked(x, dt, A, Bm, Cm, 64)
+    assert jnp.allclose(y16, y64, atol=1e-3), "chunk-size variance"
+    assert jnp.allclose(h16, h64, atol=1e-3)
+
+
+def test_whisper_decode_consistency():
+    cfg = get_config("whisper-base", smoke=True)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    from repro.models.lm import encoder_apply
+    frames = 0.02 * jax.random.normal(
+        jax.random.PRNGKey(1), (B, cfg.encoder.seq_len, cfg.d_model),
+        jnp.bfloat16)
+    enc = encoder_apply(params, frames, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    h, _, _ = lm_hidden(params, {"tokens": toks}, cfg, enc_out=enc)
+    full = lm_logits(params, h, cfg).astype(jnp.float32)
+    sp = S - TAIL
+    lg, caches = prefill(params, {"tokens": toks[:, :sp]}, cfg, enc_out=enc,
+                         capacity=S)
+    outs = [lg]
+    for i in range(sp, S):
+        lg, caches = decode_step(params, caches, toks[:, i:i + 1],
+                                 jnp.full((B, 1), i, jnp.int32), cfg,
+                                 enc_out=enc)
+        outs.append(lg)
+    dec = jnp.concatenate(outs[:-1], axis=1).astype(jnp.float32)
+    ref = full[:, sp - 1:S - 1]
+    err = float(jnp.abs(dec - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert err < 0.05, f"whisper decode mismatch rel={err:.3e}"

@@ -1,0 +1,102 @@
+"""LLMapReduce launcher invariants (the paper's mechanism), incl. hypothesis
+property tests: every task runs exactly once, reduce correctness, wave
+splitting, straggler re-dispatch, serial == array results."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.llmr import LLMapReduce
+from repro.core.scheduler import ArrayScheduler, SerialScheduler
+
+
+def app(x):
+    return (x * 2.0).sum(axis=-1)
+
+
+@given(n=st.integers(1, 64), wave=st.integers(1, 17))
+@settings(max_examples=15, deadline=None)
+def test_every_task_exactly_once(n, wave):
+    inputs = np.arange(n * 4, dtype=np.float32).reshape(n, 4)
+    llmr = LLMapReduce(wave_size=wave)
+    out, report = llmr.map_reduce(app, inputs)
+    np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 2.0,
+                               rtol=1e-6)
+    assert report.waves == -(-n // wave)
+    assert report.n_instances == n
+
+
+def test_reduce_applied():
+    inputs = np.ones((8, 4), np.float32)
+    llmr = LLMapReduce(wave_size=4)
+    out, report = llmr.map_reduce(app, inputs,
+                                  reduce_fn=lambda xs: np.asarray(xs).sum())
+    assert float(out) == 8 * 8.0
+    assert report.t_reduce >= 0
+
+
+def test_serial_equals_array_results():
+    inputs = np.random.default_rng(0).standard_normal((6, 4)).astype(np.float32)
+    out_a, _ = LLMapReduce(scheduler="array").map_reduce(app, inputs)
+    out_s, _ = LLMapReduce(scheduler="serial").map_reduce(app, inputs)
+    np.testing.assert_allclose(np.asarray(out_a),
+                               np.asarray([np.asarray(o) for o in out_s]),
+                               rtol=1e-6)
+
+
+def test_array_compile_cache_hits():
+    sched = ArrayScheduler()
+    inputs = np.ones((8, 4), np.float32)
+    _, rec1 = sched.launch(app, inputs, 8)
+    _, rec2 = sched.launch(app, inputs, 8)
+    assert not rec1.extra["compile_cached"]
+    assert rec2.extra["compile_cached"]
+    assert rec2.t_schedule <= rec1.t_schedule
+
+
+def test_straggler_speculative_redispatch():
+    inputs = np.ones((16, 4), np.float32)
+    llmr = LLMapReduce(wave_size=4, straggler_factor=2.0)
+    delays = {2: 1.0}  # third wave is a straggler
+
+    out, report = llmr.map_reduce(
+        app, inputs, wave_delay_hook=lambda w: delays.get(w, 0.0))
+    assert report.speculative_redispatches >= 1
+    np.testing.assert_allclose(np.asarray(out), np.full(16, 8.0), rtol=1e-6)
+
+
+def test_launch_rate_array_beats_serial():
+    """The paper's headline property at CPU scale: array launch must beat
+    serial-VM launch by a wide margin."""
+    inputs = np.ones((64, 8), np.float32)
+    import time
+    t0 = time.perf_counter()
+    LLMapReduce(scheduler="array").map_reduce(app, inputs)
+    t_array = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    LLMapReduce(scheduler="serial").map_reduce(app, inputs)
+    t_serial = time.perf_counter() - t0
+    assert t_serial > 3.0 * t_array, (t_serial, t_array)
+
+
+def test_launch_model_headline():
+    from repro.core.launch_model import (copy_time, headline,
+                                         launch_time_azure,
+                                         launch_time_llmr)
+    h = headline()
+    # paper: 16,384 Windows instances in ~5 minutes
+    assert h["within_1p5x"], h
+    # Fig 6 ordering: llmr << azure at every N
+    for n in (16, 256, 4096, 16384):
+        assert launch_time_llmr(n) < launch_time_azure(n)
+    # Fig 5: copy time stays small relative to launch time
+    assert copy_time(16384) < 0.2 * launch_time_llmr(16384)
+
+
+@given(st.integers(1, 14))
+def test_launch_model_monotone(k):
+    from repro.core.launch_model import CURVES
+    n = 2 ** k
+    for fn in CURVES.values():
+        assert fn(2 * n) >= fn(n) * 0.999  # time nondecreasing in N

@@ -1,0 +1,83 @@
+"""Optimizer unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   global_norm, schedule)
+
+
+def test_adamw_matches_reference_numpy():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                      grad_clip=1e9, warmup_steps=0, total_steps=10**9)
+    p = {"w_up": jnp.array([1.0, -2.0, 3.0], jnp.float32)}
+    g = {"w_up": jnp.array([0.1, 0.2, -0.3], jnp.float32)}
+    st_ = adamw_init(p)
+    p1, st1, _ = adamw_update(cfg, p, g, st_)
+    # numpy reference
+    m = 0.1 * np.asarray(g["w_up"])
+    v = 0.001 * np.asarray(g["w_up"]) ** 2
+    mh, vh = m / (1 - 0.9), v / (1 - 0.999)
+    ref = np.asarray(p["w_up"]) - 1e-2 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p1["w_up"]), ref, rtol=1e-5)
+    assert int(st1["step"]) == 1
+
+
+def test_grad_clip_applied():
+    cfg = AdamWConfig(lr=1e-2, grad_clip=0.5, warmup_steps=0)
+    p = {"w_up": jnp.ones((4,), jnp.float32)}
+    g = {"w_up": jnp.full((4,), 100.0, jnp.float32)}
+    _, _, m = adamw_update(cfg, p, g, adamw_init(p))
+    assert float(m["grad_norm"]) == pytest.approx(200.0, rel=1e-4)
+
+
+def test_decay_mask_skips_norms():
+    cfg = AdamWConfig(lr=1.0, b1=0.0, b2=0.0, eps=1.0, weight_decay=0.5,
+                      grad_clip=1e9, warmup_steps=0)
+    p = {"w_up": jnp.ones((2,)), "norm_attn": {"scale": jnp.ones((2,))}}
+    g = jax.tree_util.tree_map(jnp.zeros_like, p)
+    p1, _, _ = adamw_update(cfg, p, g, adamw_init(p))
+    assert float(p1["w_up"][0]) < 1.0               # decayed
+    assert float(p1["norm_attn"]["scale"][0]) == 1.0  # not decayed
+
+
+@given(step=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_schedule_bounded(step):
+    cfg = AdamWConfig(lr=3e-4, warmup_steps=100, total_steps=10_000)
+    lr = float(schedule(cfg, jnp.asarray(step)))
+    assert 0.0 <= lr <= cfg.lr * 1.0001
+
+
+def test_schedule_warmup_then_decay():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=1000,
+                      min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.asarray(50))) == pytest.approx(5e-4)
+    assert float(schedule(cfg, jnp.asarray(100))) == pytest.approx(1e-3)
+    assert float(schedule(cfg, jnp.asarray(1000))) == pytest.approx(1e-4)
+
+
+@given(vals=st.lists(st.floats(-10, 10, allow_nan=False), min_size=1,
+                     max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_global_norm_property(vals):
+    t = {"a": jnp.asarray(vals, jnp.float32)}
+    expect = np.linalg.norm(np.asarray(vals, np.float32))
+    assert float(global_norm(t)) == pytest.approx(float(expect), abs=1e-4)
+
+
+def test_moe_aux_loss_balancing_signal():
+    """Uniform routing -> aux == 1 (its minimum); skewed routing -> > 1."""
+    from repro.models.moe import moe_apply, moe_init
+    from repro.models.spec import MoeSpec
+    from repro.configs import get_config
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    spec = cfg.groups[0].pattern[0].moe
+    params = moe_init(jax.random.PRNGKey(0), cfg.d_model, spec, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model),
+                          jnp.bfloat16)
+    _, aux = moe_apply(params, x, spec)
+    assert float(aux) / spec.router_aux_weight >= 0.99

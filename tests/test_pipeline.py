@@ -1,0 +1,52 @@
+"""Pipeline parallelism: shard_map+ppermute schedule == sequential stages."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.pipeline import pipeline_apply, reference_apply
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 1, reason="needs devices")
+
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"]) + x
+
+
+def test_pipeline_matches_sequential():
+    n_stages = len(jax.devices())
+    mesh = jax.make_mesh((n_stages,), ("pod",))
+    key = jax.random.PRNGKey(0)
+    D, B = 16, 8
+    params = {"w": 0.3 * jax.random.normal(key, (n_stages, D, D))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+
+    ref = reference_apply(stage_fn, params, x)
+    out = pipeline_apply(stage_fn, params, x, mesh, axis="pod",
+                         microbatches=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pipeline_grad_flows():
+    n_stages = len(jax.devices())
+    mesh = jax.make_mesh((n_stages,), ("pod",))
+    D, B = 8, 4
+    params = {"w": 0.3 * jax.random.normal(jax.random.PRNGKey(0),
+                                           (n_stages, D, D))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+
+    def loss(p):
+        return jnp.sum(pipeline_apply(stage_fn, p, x, mesh,
+                                      microbatches=2) ** 2)
+
+    def loss_ref(p):
+        return jnp.sum(reference_apply(stage_fn, p, x) ** 2)
+
+    g = jax.grad(loss)(params)["w"]
+    g_ref = jax.grad(loss_ref)(params)["w"]
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=5e-4, atol=5e-4)

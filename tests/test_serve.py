@@ -1,0 +1,40 @@
+"""Batched serving engine: slot admission, continuous decode, stats."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.lm import lm_init
+from repro.serve.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-14b", smoke=True)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_completes_requests(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, slots=4, capacity=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=6) for i in range(6)]
+    stats = eng.run(reqs, max_steps=200)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) >= r.max_new for r in reqs)
+    assert stats["admitted"] == 6
+    assert stats["decoded"] > 0
+
+
+def test_engine_batches_share_steps(setup):
+    """Continuous batching: 4 concurrent requests must cost far fewer steps
+    than 4 sequential ones (the array-launch property at the serving layer)."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    eng = ServeEngine(cfg, params, slots=4, capacity=64)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=10) for i in range(4)]
+    stats = eng.run(reqs, max_steps=200)
+    assert stats["steps"] <= 15, stats   # ~10 shared steps, not 40
