@@ -1,4 +1,5 @@
-"""Render EXPERIMENTS.md tables from dry-run JSONL results."""
+"""Render EXPERIMENTS.md tables from dry-run JSONL results or launch
+telemetry CSV (``repro.core.telemetry.table`` output)."""
 from __future__ import annotations
 
 import json
@@ -7,6 +8,24 @@ import sys
 
 def load(path):
     return [json.loads(l) for l in open(path)]
+
+
+def launch_table(path):
+    """Telemetry CSV (strategy,n,t_schedule,t_stage,t_spawn,t_first_result,
+    t_total,rate_per_s) -> markdown, with the node/core drain split the
+    per-level timing columns expose (see EXPERIMENTS.md)."""
+    lines = [l.strip() for l in open(path) if l.strip()
+             and not l.startswith("#")]
+    header = lines[0].split(",")
+    out = ["| " + " | ".join(header) + " | t_core_drain |",
+           "|" + "---|" * (len(header) + 1)]
+    i_first = header.index("t_first_result")
+    i_spawn = header.index("t_spawn")
+    for line in lines[1:]:
+        cells = line.split(",")
+        drain = float(cells[i_spawn]) - float(cells[i_first])
+        out.append("| " + " | ".join(cells) + f" | {drain:.4f} |")
+    return "\n".join(out)
 
 
 def roofline_table(rows, mesh="16x16"):
@@ -49,11 +68,14 @@ def dryrun_table(rows):
 
 
 if __name__ == "__main__":
-    rows = load(sys.argv[1])
     which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
-    if which == "roofline":
-        print(roofline_table(rows))
-    elif which == "dryrun":
-        print(dryrun_table(rows))
-    elif which == "multipod":
-        print(roofline_table(rows, mesh="2x16x16"))
+    if which == "launch":
+        print(launch_table(sys.argv[1]))
+    else:
+        rows = load(sys.argv[1])
+        if which == "roofline":
+            print(roofline_table(rows))
+        elif which == "dryrun":
+            print(dryrun_table(rows))
+        elif which == "multipod":
+            print(roofline_table(rows, mesh="2x16x16"))

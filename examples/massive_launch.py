@@ -1,28 +1,49 @@
 """The headline reproduction: interactively launch 16,384 application
-instances — measured end-to-end on this machine via LLMapReduce array
-waves, with straggler telemetry, plus the paper-scale model comparison.
+instances — measured end-to-end on this machine via LLMapReduce waves
+through the pipelined LaunchBackend (wave k+1 staged + enqueued while wave
+k executes), with straggler telemetry, per-level launch-tree timings, a
+persistent AOT compile cache, plus the paper-scale model comparison.
 
     PYTHONPATH=src python examples/massive_launch.py [--n 16384]
+        [--backend pipelined|array|serial] [--compare]
 """
 import argparse
 import time
 
-import jax.numpy as jnp
+import numpy as np
 
+from repro.core.backend import make_backend
+from repro.core.compile_cache import CompileCache
 from repro.core.launch_model import CURVES, copy_time
 from repro.core.llmr import LLMapReduce
 from repro.core.staging import stage_parallel_pull, synth_env, tree_bytes
-import numpy as np
+from repro.core.telemetry import table
 
 
 def app(x):
     return (x * x).sum()
 
 
+def run_launch(kind, cache, args, inputs):
+    llmr = LLMapReduce(wave_size=args.wave,
+                       backend=make_backend(kind, cache=cache))
+    t0 = time.perf_counter()
+    outs, report = llmr.map_reduce(app, inputs,
+                                   reduce_fn=lambda xs: np.asarray(xs).sum())
+    return outs, report, time.perf_counter() - t0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=16384)
     ap.add_argument("--wave", type=int, default=4096)
+    ap.add_argument("--backend", default="pipelined",
+                    choices=("pipelined", "array", "serial"))
+    ap.add_argument("--compare", action="store_true",
+                    help="also time the array backend for contrast")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent AOT cache dir (a second run of this "
+                         "script launches without compiling)")
     args = ap.parse_args()
 
     # Step 1: stage the 'application environment' (paper Fig 5)
@@ -34,18 +55,32 @@ def main():
     print(f"staged {tree_bytes(env) / 1e6:.1f} MB environment in "
           f"{rec.t_stage * 1e3:.1f} ms (parallel pull)")
 
-    # Step 2: the array launch (paper Figs 6/7)
+    # Step 2: the array launch (paper Figs 6/7), pipelined by default:
+    # wave k+1 is sliced/staged/enqueued while wave k executes
+    cache = CompileCache(cache_dir=args.cache_dir)
     inputs = np.random.default_rng(0).standard_normal(
         (args.n, 32)).astype(np.float32)
-    llmr = LLMapReduce(wave_size=args.wave)
-    t0 = time.perf_counter()
-    outs, report = llmr.map_reduce(app, inputs,
-                                   reduce_fn=lambda xs: np.asarray(xs).sum())
-    dt = time.perf_counter() - t0
-    print(f"launched {args.n:,} instances in {dt:.2f}s "
+    outs, report, dt = run_launch(args.backend, cache, args, inputs)
+    r0 = report.records[0]
+    print(f"launched {args.n:,} instances in {dt:.2f}s via {r0.strategy} "
           f"({args.n / dt:,.0f} inst/s, {report.waves} waves, "
-          f"{report.speculative_redispatches} speculative re-dispatches)")
+          f"{report.speculative_redispatches} speculative re-dispatches, "
+          f"first result after {r0.t_first_result * 1e3:.1f} ms, "
+          f"compile={r0.extra.get('compile_source', 'n/a')})")
     print(f"reduce result {float(outs):.1f} in {report.t_reduce * 1e3:.1f} ms")
+    print("\nper-wave launch records (per-level: sched -> node -> core):")
+    print(table(report.records[:4], title=f"first waves of {args.n}"))
+    if args.compare:
+        # warm BOTH first (untimed) so the timed contrast is pure launch
+        # time — their cache keys differ (donation), so each needs its
+        # own warm-up regardless of which backend ran above
+        run_launch("pipelined", cache, args, inputs)
+        run_launch("array", cache, args, inputs)
+        _, _, dt_pipe = run_launch("pipelined", cache, args, inputs)
+        _, _, dt_array = run_launch("array", cache, args, inputs)
+        print(f"\nwarm backend contrast: pipelined {dt_pipe * 1e3:.1f} ms "
+              f"vs array {dt_array * 1e3:.1f} ms "
+              f"({dt_array / dt_pipe:.2f}x)")
 
     # Step 3: paper-scale context
     print("\npaper-scale (16,384 instances, 256 KNL nodes) launch model:")

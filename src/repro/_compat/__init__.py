@@ -1,0 +1,2 @@
+# Optional-dependency shims. Nothing here is imported unless the real
+# package is absent (see tests/conftest.py).

@@ -1,0 +1,292 @@
+"""LaunchBackend: one protocol for every way this repo starts instances.
+
+The paper's launch tree is scheduler -> node -> core: ONE scheduler
+interaction fans an array job out to nodes, each node fans out to cores,
+and staging overlaps with dispatch so no level ever waits on a level it
+does not depend on. This module is that tree for a JAX mesh:
+
+  SerialBackend     the heavyweight-VM baseline — every instance pays its
+                    own trace+compile+dispatch (Fig 6's serial curve).
+  ArrayBackend      the LLMapReduce array job — ONE compiled program whose
+                    task axis is vmapped and (optionally) sharded over the
+                    mesh ``data`` axis; per-instance marginal cost is a
+                    vmap lane. Compiles through the persistent
+                    ``CompileCache`` so repeat launches skip compile even
+                    across processes.
+  PipelinedBackend  ArrayBackend + JAX async dispatch: wave k+1 is sliced,
+                    staged, and enqueued while wave k is still executing
+                    on device (double-buffered; ``donate_argnums`` on wave
+                    buffers off-CPU), results harvested by non-blocking
+                    readiness polling instead of a per-wave
+                    ``block_until_ready`` barrier.
+
+Hierarchy: a wave of W tasks optionally splits into (W // inner_lanes)
+outer tasks x ``inner_lanes`` inner vmap lanes — the outer axis is the
+"node" level (sharded over the mesh ``data`` axis when divisible), the
+inner axis the "core" level. Per-level counts land in
+``LaunchRecord.fanout`` and per-level timings in ``LaunchRecord.levels()``.
+
+``dispatch()`` is the one verb: it returns a ``WaveHandle`` whose result
+may still be computing. Synchronous backends advertise
+``max_in_flight = 1`` (the policy layer harvests immediately);
+``PipelinedBackend`` advertises its pipeline depth.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compile_cache import CompileCache, default_cache
+from repro.core.telemetry import LaunchRecord, Timer
+
+
+def _tree_ready(tree: Any) -> bool:
+    return all(l.is_ready() for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "is_ready"))
+
+
+class WaveHandle:
+    """One in-flight wave: outputs may still be computing on device."""
+
+    def __init__(self, out: Any, rec: LaunchRecord, t0: float):
+        self.out = out
+        self.rec = rec
+        self.t0 = t0                      # perf_counter at dispatch
+        self._t_first: Optional[float] = None
+        self._harvested = False
+
+    @classmethod
+    def done(cls, out: Any, rec: LaunchRecord, t0: float) -> "WaveHandle":
+        """A wave that completed synchronously (rec timings already set)."""
+        h = cls(out, rec, t0)
+        h._t_first = rec.t_first_result or None
+        h._harvested = True
+        return h
+
+    def poll(self) -> bool:
+        """Non-blocking readiness check; notes time-to-first-result."""
+        if self._harvested:
+            return True
+        leaves = jax.tree_util.tree_leaves(self.out)
+        if self._t_first is None:
+            for l in leaves:
+                if not hasattr(l, "is_ready") or l.is_ready():
+                    self._t_first = time.perf_counter() - self.t0
+                    break
+        return _tree_ready(leaves)
+
+    def result(self) -> tuple:
+        """Block until the wave completes; returns (out, LaunchRecord)."""
+        if not self._harvested:
+            leaves = jax.tree_util.tree_leaves(self.out)
+            if self._t_first is None and leaves:
+                first = leaves[0]
+                if hasattr(first, "block_until_ready"):
+                    first.block_until_ready()
+                self._t_first = time.perf_counter() - self.t0
+            jax.block_until_ready(self.out)
+            self.rec.t_spawn = time.perf_counter() - self.t0
+            self.rec.t_first_result = (self._t_first
+                                       if self._t_first is not None
+                                       else self.rec.t_spawn)
+            self._harvested = True
+        return self.out, self.rec
+
+
+@runtime_checkable
+class LaunchBackend(Protocol):
+    """What the policy layer (``core.llmr``) needs from a launcher."""
+
+    name: str
+    max_in_flight: int
+
+    def dispatch(self, fn: Callable, chunk: Any, n: int) -> WaveHandle: ...
+
+    def launch(self, fn: Callable, inputs: Any, n: int) -> tuple: ...
+
+
+# ----------------------------------------------------------------------
+# Serial (VM baseline)
+# ----------------------------------------------------------------------
+
+class SerialBackend:
+    """Per-instance compile + dispatch (VM-style baseline).
+
+    To model the paper's serial scheduler honestly we defeat jax's compile
+    cache per instance by closing over a distinct python constant — each
+    submission is a fresh program, as each VM boot is a fresh environment.
+    """
+
+    name = "serial-vm"
+    max_in_flight = 1
+
+    def __init__(self, per_task_overhead_s: float = 0.0):
+        self.per_task_overhead_s = per_task_overhead_s
+
+    def launch(self, fn: Callable, inputs: Any, n: int,
+               per_task_overhead_s: Optional[float] = None) -> tuple:
+        overhead = (self.per_task_overhead_s if per_task_overhead_s is None
+                    else per_task_overhead_s)
+        rec = LaunchRecord(self.name, n)
+        rec.fanout = {"sched": n, "node": 1, "core": 1}
+        t = Timer()
+        t0 = time.perf_counter()
+        outs = []
+        for i in range(n):
+            item = jax.tree_util.tree_map(lambda x: x[i], inputs)
+            salt = i  # defeats the compile cache: a new program per instance
+
+            def inst(x, _s=salt):
+                return fn(x), jnp.asarray(_s)
+
+            outs.append(jax.block_until_ready(jax.jit(inst)(item))[0])
+            if i == 0:
+                rec.t_first_result = time.perf_counter() - t0
+            if overhead:
+                time.sleep(overhead)
+        rec.t_spawn = t.lap()
+        return outs, rec
+
+    def dispatch(self, fn: Callable, chunk: Any, n: int) -> WaveHandle:
+        t0 = time.perf_counter()
+        outs, rec = self.launch(fn, chunk, n)
+        return WaveHandle.done(outs, rec, t0)
+
+
+# ----------------------------------------------------------------------
+# Array job (compile once, one dispatch covers the wave)
+# ----------------------------------------------------------------------
+
+class ArrayBackend:
+    """One array job per wave: compile once (cached, persistent), dispatch
+    all N lanes at once; optional two-level node/core fan-out."""
+
+    name = "llmr-array"
+    max_in_flight = 1
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
+                 task_axis: str = "data",
+                 inner_lanes: Optional[int] = None,
+                 cache: Optional[CompileCache] = None,
+                 donate: bool = False):
+        self.mesh = mesh
+        self.task_axis = task_axis
+        self.inner_lanes = inner_lanes
+        self.cache = cache if cache is not None else default_cache()
+        # buffer donation is a no-op (warning) on CPU backends
+        self.donate = donate and jax.default_backend() != "cpu"
+
+    # -- general-purpose AOT compile through the shared cache -------------
+    def compile(self, fn: Callable, example_args: tuple,
+                extras: tuple = (), donate_argnums: tuple = ()) -> tuple:
+        """(compiled, source): serve + launch share this entry point."""
+        return self.cache.compile(fn, example_args, mesh=self.mesh,
+                                  donate_argnums=donate_argnums,
+                                  extras=extras)
+
+    # -- wave planning ----------------------------------------------------
+    def _plan(self, n: int) -> tuple:
+        """-> (outer, inner): node-level x core-level fan-out of a wave."""
+        inner = self.inner_lanes
+        if inner and inner > 1 and n % inner == 0:
+            return n // inner, inner
+        return n, 1
+
+    def _compile_wave(self, fn: Callable, chunk: Any, n: int) -> tuple:
+        outer, inner = self._plan(n)
+        if inner > 1:
+            mapped = jax.vmap(jax.vmap(fn))
+            chunk = jax.tree_util.tree_map(
+                lambda x: x.reshape((outer, inner) + x.shape[1:]), chunk)
+        else:
+            mapped = jax.vmap(fn)
+        in_shardings = None
+        if (self.mesh is not None
+                and outer % self.mesh.shape[self.task_axis] == 0):
+            sh = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec(self.task_axis))
+            in_shardings = jax.tree_util.tree_map(lambda _: sh, chunk)
+        compiled, source = self.cache.compile(
+            mapped, (chunk,), key_fn=fn, mesh=self.mesh,
+            in_shardings=in_shardings,
+            donate_argnums=(0,) if self.donate else (),
+            extras=("wave", outer, inner))
+        return compiled, source, chunk, (outer, inner)
+
+    # -- LaunchBackend ----------------------------------------------------
+    def dispatch(self, fn: Callable, chunk: Any, n: int) -> WaveHandle:
+        """Enqueue one wave. Under JAX async dispatch this returns as soon
+        as the program is submitted; the WaveHandle's outputs are futures."""
+        rec = LaunchRecord(self.name, n)
+        t = Timer()
+        compiled, source, staged, (outer, inner) = self._compile_wave(
+            fn, chunk, n)
+        rec.t_schedule = t.lap()      # the ONE scheduler interaction
+        rec.extra["compile_source"] = source
+        rec.extra["compile_cached"] = source != "compiled"
+        rec.fanout = {"sched": 1, "node": outer, "core": inner}
+        t0 = time.perf_counter()
+        out = compiled(staged)
+        if inner > 1:                 # un-nest node/core axes (async too)
+            out = jax.tree_util.tree_map(
+                lambda x: x.reshape((n,) + x.shape[2:]), out)
+        rec.t_dispatch = time.perf_counter() - t0
+        return WaveHandle(out, rec, t0)
+
+    def launch(self, fn: Callable, inputs: Any, n: int) -> tuple:
+        return self.dispatch(fn, inputs, n).result()
+
+
+# ----------------------------------------------------------------------
+# Pipelined (async double-buffered waves)
+# ----------------------------------------------------------------------
+
+class PipelinedBackend(ArrayBackend):
+    """ArrayBackend + overlap: advertises ``depth`` waves in flight, so the
+    policy driver materializes, stages, and enqueues wave k+1 while wave k
+    is still executing on device, and harvests by readiness polling instead
+    of a per-wave ``block_until_ready`` barrier. ``dispatch`` itself is the
+    inherited non-blocking enqueue (JAX async dispatch); off-CPU, wave
+    input buffers are donated so the two in-flight waves double-buffer."""
+
+    name = "llmr-pipelined"
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
+                 task_axis: str = "data",
+                 inner_lanes: Optional[int] = None,
+                 cache: Optional[CompileCache] = None,
+                 depth: int = 2,
+                 donate: bool = True):
+        super().__init__(mesh=mesh, task_axis=task_axis,
+                         inner_lanes=inner_lanes, cache=cache, donate=donate)
+        self.max_in_flight = max(1, depth)
+
+
+# ----------------------------------------------------------------------
+# Factory
+# ----------------------------------------------------------------------
+
+BACKENDS = {"serial": SerialBackend, "array": ArrayBackend,
+            "pipelined": PipelinedBackend}
+
+
+def make_backend(kind: str, mesh: Optional[jax.sharding.Mesh] = None,
+                 cache: Optional[CompileCache] = None,
+                 **kwargs) -> LaunchBackend:
+    """'serial' | 'array' | 'pipelined' -> a ready LaunchBackend.
+
+    For 'serial', ``mesh``/``cache`` are accepted but meaningless (the
+    per-instance VM baseline uses neither); any other kwargs are passed
+    through, so unsupported options fail loudly instead of being dropped.
+    """
+    if kind == "serial":
+        return SerialBackend(**kwargs)
+    try:
+        cls = BACKENDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown backend {kind!r}; "
+                         f"choose from {sorted(BACKENDS)}") from None
+    return cls(mesh=mesh, cache=cache, **kwargs)

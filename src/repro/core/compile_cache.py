@@ -1,0 +1,335 @@
+"""Persistent AOT compile cache: the launch-side analogue of the paper's
+pre-staged Wine environment.
+
+The paper pays environment setup ONCE (the Wine prefix is built ahead of
+time and staged to node-local disk), so instance N's start cost is pure
+process spawn. The JAX analogue of "environment setup" is trace+lower+
+compile; this module makes that cost a one-time cost *across processes*:
+
+  * executables are keyed by a CONTENT fingerprint — a hash of the mapped
+    function's source (plus bounded closure/default/global context,
+    including sampled VALUES of captured arrays), the abstract input
+    pytree (structure + shapes + dtypes), the mesh shape, the jit
+    options, and a salt over the ``repro`` package's own sources (so
+    edits anywhere in the call graph inside the package invalidate the
+    disk tier) — never by ``id(fn)``, which CPython reuses after garbage
+    collection and can silently alias two different programs;
+  * compiled executables are spilled to disk via
+    ``jax.experimental.serialize_executable`` and re-loaded by later
+    processes, skipping trace+compile entirely (a warm launch pays only
+    deserialization, the same way a warm Wine prefix pays only exec()).
+
+Both the launcher backends (``core.backend``) and the serving engine
+(``serve.engine``) compile through one shared cache, so a model prefilled
+by serve is already warm for launch and vice versa.
+"""
+from __future__ import annotations
+
+import hashlib
+import inspect
+import os
+import pickle
+import re
+import tempfile
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+_DEFAULT_DIR_ENV = "REPRO_COMPILE_CACHE_DIR"
+
+
+# ----------------------------------------------------------------------
+# Content fingerprinting
+# ----------------------------------------------------------------------
+
+def _obj_sig(v: Any, depth: int = 2) -> str:
+    """A stable signature for a closure cell / referenced global.
+
+    Bounded: arrays collapse to shape/dtype + a sampled value digest,
+    callables to a code hash plus (``depth`` levels of) their own closure
+    and default signatures — enough to distinguish ``f`` calling ``g1``
+    from ``f`` calling ``g2`` even when g1/g2 come from one factory over
+    different data. Memory addresses are stripped before hashing, so
+    signatures are stable across processes.
+    """
+    if isinstance(v, (int, float, bool, str, bytes, type(None))):
+        return repr(v)
+    if inspect.ismodule(v):
+        return f"mod:{v.__name__}"
+    # array-likes before callables; modules also expose .shape/.dtype
+    # attributes (as functions), hence the tuple() guard
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        try:
+            return f"arr{tuple(v.shape)}:{v.dtype}:{_array_digest(v)}"
+        except TypeError:
+            pass
+    # containers: recurse over EVERY element so interior arrays get VALUE
+    # digests (repr of a dict of weights truncates and would alias
+    # different values); the signature string is hashed if it grows long,
+    # so the key stays bounded while the content walk is complete
+    if isinstance(v, (list, tuple)):
+        sig = ";".join(_obj_sig(x, depth) for x in v)
+        return f"{type(v).__name__}[{len(v)}]:({_squash(sig)})"
+    if isinstance(v, dict):
+        try:
+            keys = sorted(v, key=repr)
+        except TypeError:
+            keys = list(v)
+        sig = ";".join(f"{k!r}={_obj_sig(v[k], depth)}" for k in keys)
+        return f"dict[{len(v)}]:({_squash(sig)})"
+    if callable(v):
+        code = getattr(v, "__code__", None)
+        if code is not None and depth > 0:
+            consts = tuple(c for c in code.co_consts
+                           if isinstance(c, (int, float, bool, str, bytes,
+                                             type(None))))
+            ctx = []
+            for cell in getattr(v, "__closure__", None) or ():
+                try:
+                    ctx.append(_obj_sig(cell.cell_contents, depth - 1))
+                except ValueError:
+                    ctx.append("<empty>")
+            for d in getattr(v, "__defaults__", None) or ():
+                ctx.append(_obj_sig(d, depth - 1))
+            return ("fn:" + hashlib.sha256(code.co_code).hexdigest()[:16]
+                    + f":{consts!r}:{';'.join(ctx)}")
+        return "call:" + getattr(v, "__qualname__", type(v).__name__)
+    r = re.sub(r" at 0x[0-9a-fA-F]+", "", repr(v))
+    if len(r) > 256:
+        return "obj:" + hashlib.sha256(r.encode()).hexdigest()[:16]
+    return r
+
+
+def _squash(sig: str, limit: int = 512) -> str:
+    return (sig if len(sig) <= limit
+            else hashlib.sha256(sig.encode()).hexdigest()[:16])
+
+
+def _array_digest(v: Any) -> str:
+    """Digest of an array's VALUES, not just shape/dtype: jit bakes
+    closed-over arrays into the program as constants, so two closures over
+    same-shaped but different-valued arrays are different programs. Large
+    arrays are sampled (head + stride + tail) to bound fingerprint cost."""
+    try:
+        flat = np.asarray(v).reshape(-1)
+        if flat.size > 65536:
+            step = max(1, flat.size // 16384)
+            flat = np.concatenate([flat[:16384], flat[::step][:16384],
+                                   flat[-16384:]])
+        return hashlib.sha256(
+            np.ascontiguousarray(flat).tobytes()).hexdigest()[:16]
+    except Exception:
+        return "opaque"
+
+
+def _source_hash(fn: Callable) -> str:
+    """Hash of what the function *is*: source text (or bytecode), closure
+    cells, defaults, and one level of referenced globals.
+
+    Deliberately NOT memoized on the function object: closure cells and
+    module globals are rebindable and closed-over arrays are mutable in
+    place, so a frozen digest could serve a stale executable — the exact
+    failure class the content fingerprint exists to eliminate. The cost
+    is bounded (sampled array digests, one level of context) and the
+    pipelined backend overlaps it with device execution anyway."""
+    try:
+        src = inspect.getsource(fn)
+    except (OSError, TypeError):
+        code = getattr(fn, "__code__", None)
+        src = code.co_code.hex() if code is not None else repr(
+            getattr(fn, "__qualname__", type(fn).__name__))
+    parts = [getattr(fn, "__module__", ""), getattr(fn, "__qualname__", ""),
+             src]
+    for cell in getattr(fn, "__closure__", None) or ():
+        try:
+            parts.append(_obj_sig(cell.cell_contents))
+        except ValueError:          # empty cell
+            parts.append("<empty>")
+    for d in getattr(fn, "__defaults__", None) or ():
+        parts.append("default:" + _obj_sig(d))
+    for k, d in (getattr(fn, "__kwdefaults__", None) or {}).items():
+        parts.append(f"kwdefault:{k}=" + _obj_sig(d))
+    code = getattr(fn, "__code__", None)
+    if code is not None:
+        g = getattr(fn, "__globals__", {})
+        for name in sorted(code.co_names):
+            if name in g:
+                parts.append(f"{name}={_obj_sig(g[name])}")
+    return hashlib.sha256("\n".join(parts).encode()).hexdigest()
+
+
+_TREE_SALT: Optional[str] = None
+
+
+def _source_tree_salt() -> str:
+    """Digest of the ``repro`` package's source files (path, mtime, size),
+    computed once per process and folded into every fingerprint.
+
+    The static context walk above sees the launched function, its closure/
+    defaults/globals, and one level of referenced callables — it cannot
+    see an edit buried deeper in the call graph (fn -> g -> h). Rather
+    than serve a stale persisted executable after such an edit, ANY change
+    to the package's sources invalidates the disk tier (a conservative
+    miss, never a wrong hit). Callees in modules outside ``repro`` remain
+    the caller's responsibility (pass a version via ``extras``)."""
+    global _TREE_SALT
+    if _TREE_SALT is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        h = hashlib.sha256()
+        for dirpath, _, files in sorted(os.walk(root)):
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    p = os.path.join(dirpath, f)
+                    try:
+                        st = os.stat(p)
+                    except OSError:
+                        continue
+                    h.update(f"{os.path.relpath(p, root)}:"
+                             f"{st.st_mtime_ns}:{st.st_size}".encode())
+        _TREE_SALT = h.hexdigest()[:16]
+    return _TREE_SALT
+
+
+def abstractify(tree: Any) -> Any:
+    """Concrete pytree -> ShapeDtypeStruct pytree (identity on structs)."""
+    return jax.tree_util.tree_map(
+        lambda x: x if isinstance(x, jax.ShapeDtypeStruct)
+        else jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def fingerprint(fn: Callable, abstract_args: tuple,
+                mesh: Optional[jax.sharding.Mesh] = None,
+                extras: tuple = ()) -> str:
+    """Content key for one (program, input signature, topology) triple."""
+    leaves, treedef = jax.tree_util.tree_flatten(abstractify(abstract_args))
+    avals = "|".join(f"{tuple(l.shape)}:{l.dtype}" for l in leaves)
+    mesh_sig = tuple(mesh.shape.items()) if mesh is not None else ()
+    blob = "\n".join([
+        _source_hash(fn), str(treedef), avals, str(mesh_sig),
+        str(tuple(extras)), jax.__version__, jax.default_backend(),
+        _source_tree_salt(),
+    ])
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ----------------------------------------------------------------------
+# The cache
+# ----------------------------------------------------------------------
+
+class CompileCache:
+    """Two-tier (memory, disk) cache of AOT-compiled executables.
+
+    Disk persistence is best-effort: any serialization failure degrades to
+    memory-only caching, never to an error on the launch path.
+    """
+
+    def __init__(self, cache_dir: Optional[str] = None,
+                 persistent: bool = True):
+        if cache_dir is None:
+            cache_dir = os.environ.get(
+                _DEFAULT_DIR_ENV,
+                os.path.join(os.path.expanduser("~"), ".cache", "repro-aot"))
+        self.cache_dir = cache_dir
+        self.persistent = persistent
+        self._mem: dict = {}
+        self._lock = threading.Lock()
+        self.stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0,
+                      "spills": 0, "spill_errors": 0}
+
+    # -- tiers ------------------------------------------------------------
+    def _path(self, key: str) -> str:
+        return os.path.join(self.cache_dir, key + ".aotx")
+
+    def _disk_get(self, key: str):
+        if not self.persistent:
+            return None
+        try:
+            with open(self._path(key), "rb") as f:
+                payload = pickle.load(f)
+            from jax.experimental.serialize_executable import (
+                deserialize_and_load)
+            return deserialize_and_load(*payload)
+        except Exception:
+            return None
+
+    def _disk_put(self, key: str, compiled) -> None:
+        if not self.persistent:
+            return
+        try:
+            from jax.experimental.serialize_executable import serialize
+            payload = serialize(compiled)
+            os.makedirs(self.cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(payload, f)
+            os.replace(tmp, self._path(key))     # atomic publish
+            self.stats["spills"] += 1
+        except Exception:
+            self.stats["spill_errors"] += 1
+
+    # -- public API -------------------------------------------------------
+    def get(self, key: str):
+        """-> (compiled, source) where source in {"memory","disk",None}."""
+        with self._lock:
+            if key in self._mem:
+                self.stats["mem_hits"] += 1
+                return self._mem[key], "memory"
+        compiled = self._disk_get(key)
+        if compiled is not None:
+            with self._lock:
+                self._mem[key] = compiled
+                self.stats["disk_hits"] += 1
+            return compiled, "disk"
+        self.stats["misses"] += 1
+        return None, None
+
+    def put(self, key: str, compiled, spill: bool = True) -> None:
+        with self._lock:
+            self._mem[key] = compiled
+        if spill:
+            self._disk_put(key, compiled)
+
+    def compile(self, fn: Callable, example_args: tuple, *,
+                key_fn: Optional[Callable] = None,
+                mesh: Optional[jax.sharding.Mesh] = None,
+                in_shardings: Any = None,
+                donate_argnums: tuple = (),
+                extras: tuple = ()):
+        """AOT-compile ``fn`` for the signature of ``example_args``.
+
+        ``key_fn`` fingerprints the cache entry when ``fn`` is a transform
+        wrapper (e.g. a vmap of the user function) whose own source is not
+        distinguishing. -> (compiled, source), source in
+        {"memory","disk","compiled"}.
+        """
+        avals = abstractify(tuple(example_args))
+        key = fingerprint(key_fn if key_fn is not None else fn, avals,
+                          mesh=mesh,
+                          extras=tuple(extras) + (bool(donate_argnums),
+                                                  str(in_shardings)))
+        compiled, source = self.get(key)
+        if compiled is not None:
+            return compiled, source
+        kwargs = {}
+        if in_shardings is not None:
+            kwargs["in_shardings"] = in_shardings
+        if donate_argnums:
+            kwargs["donate_argnums"] = donate_argnums
+        compiled = jax.jit(fn, **kwargs).lower(*avals).compile()
+        self.put(key, compiled)
+        return compiled, "compiled"
+
+
+_default_cache: Optional[CompileCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> CompileCache:
+    """Process-wide shared cache (launcher + serve use the same one)."""
+    global _default_cache
+    with _default_lock:
+        if _default_cache is None:
+            _default_cache = CompileCache()
+        return _default_cache

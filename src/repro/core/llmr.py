@@ -9,20 +9,29 @@ paid ONCE for the whole array.
 TPU-native translation: the "array job" is one jit-compiled program whose
 task axis is vmapped/sharded across the mesh; levels are (program dispatch ->
 mesh `data` axis -> vmap lanes). Tasks too numerous for one program dispatch
-are split into WAVES; waves give us the paper's implicit reduce barrier and
-the hook for straggler mitigation (speculative re-dispatch of slow waves —
-the launch-layer fault-tolerance story, where it belongs).
+are split into WAVES.
+
+This class is pure POLICY: wave slicing, in-flight depth, straggler
+mitigation (speculative re-dispatch of outlier waves), and the reduce step.
+All mechanism lives behind the ``LaunchBackend`` protocol
+(``repro.core.backend``): a synchronous backend (serial, array) is harvested
+wave-by-wave, exactly the seed behaviour; ``PipelinedBackend`` advertises
+``max_in_flight > 1`` and the driver keeps that many waves in flight,
+slicing and enqueueing wave k+1 while wave k executes, harvesting by
+non-blocking readiness polls.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
 
 import jax
 import numpy as np
 
-from repro.core.scheduler import ArrayScheduler, SerialScheduler
+from repro.core.backend import LaunchBackend, make_backend
+from repro.core.compile_cache import CompileCache
 from repro.core.telemetry import LaunchRecord, Timer
 
 
@@ -36,6 +45,13 @@ class MapReduceReport:
 
     @property
     def n_instances(self) -> int:
+        # a superseded straggler attempt covers the same tasks as its
+        # re-dispatch: count the work once, keep both records' cost
+        return sum(r.n_instances for r in self.records
+                   if not r.extra.get("superseded_by_redispatch"))
+
+    @property
+    def n_attempts(self) -> int:
         return sum(r.n_instances for r in self.records)
 
     @property
@@ -49,55 +65,94 @@ class LLMapReduce:
     def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
                  wave_size: Optional[int] = None,
                  straggler_factor: float = 3.0,
-                 scheduler: str = "array"):
+                 scheduler: str = "array",
+                 backend: Optional[LaunchBackend] = None,
+                 cache: Optional[CompileCache] = None,
+                 inner_lanes: Optional[int] = None):
         self.mesh = mesh
         self.wave_size = wave_size
         self.straggler_factor = straggler_factor
-        self.sched = (ArrayScheduler(mesh) if scheduler == "array"
-                      else SerialScheduler())
-        self.scheduler_kind = scheduler
+        if backend is None:
+            kwargs = {} if scheduler == "serial" else {
+                "cache": cache, "inner_lanes": inner_lanes}
+            backend = make_backend(scheduler, mesh=mesh, **kwargs)
+        self.backend = backend
+        self.sched = backend                 # seed-era alias
+        self.scheduler_kind = getattr(backend, "name", scheduler)
 
     # ------------------------------------------------------------------
     def map_reduce(self, map_fn: Callable, inputs: Any,
                    reduce_fn: Optional[Callable] = None,
-                   wave_delay_hook: Optional[Callable[[int], float]] = None
-                   ) -> tuple:
-        """inputs: pytree with leading task axis N. Returns (out, report).
+                   wave_delay_hook: Optional[Callable[[int], float]] = None,
+                   n_tasks: Optional[int] = None) -> tuple:
+        """inputs: pytree with leading task axis N, OR a wave loader
+        ``inputs(lo, hi) -> chunk`` (the paper's input-set scan: per-wave
+        host-side materialization/staging; requires ``n_tasks``). With a
+        pipelined backend, wave k+1's loader call overlaps wave k's device
+        execution. Returns (out, report).
 
         wave_delay_hook(wave_idx) -> extra seconds (test-only straggler
         injection; a real cluster gets this signal from wave wall-clock).
         """
-        n = jax.tree_util.tree_leaves(inputs)[0].shape[0]
+        if callable(inputs):
+            if n_tasks is None:
+                raise ValueError("a wave-loader `inputs` needs n_tasks")
+            n = n_tasks
+            load = inputs
+        else:
+            n = jax.tree_util.tree_leaves(inputs)[0].shape[0]
+
+            def load(lo, hi):
+                return jax.tree_util.tree_map(lambda x: x[lo:hi], inputs)
         wave = self.wave_size or n
+        depth = max(1, getattr(self.backend, "max_in_flight", 1))
         report = MapReduceReport()
         t_all = Timer()
         wave_times: List[float] = []
-        outs = []
-        idx = 0
-        wi = 0
-        while idx < n:
-            hi = min(idx + wave, n)
-            chunk = jax.tree_util.tree_map(lambda x: x[idx:hi], inputs)
-            t = Timer()
-            if wave_delay_hook is not None:
-                time.sleep(wave_delay_hook(wi))
-            out, rec = self.sched.launch(map_fn, chunk, hi - idx)
-            dt = t.lap()
+        bounds = [(lo, min(lo + wave, n)) for lo in range(0, n, wave)]
+        outs: List[Any] = [None] * len(bounds)
+        in_flight: deque = deque()   # (wave_idx, handle, (lo, hi), t_start)
+
+        def harvest(wi, handle, span, t_start):
+            out, rec = handle.result()
+            dt = time.perf_counter() - t_start
             # straggler mitigation: if this wave is an outlier vs the median
             # of completed waves, speculatively re-dispatch it (idempotent
-            # tasks; first result wins — here the re-run, which has no delay).
+            # tasks; first result wins — here the re-run, which has no delay)
             if (len(wave_times) >= 2
                     and dt > self.straggler_factor * float(np.median(wave_times))):
-                out, rec2 = self.sched.launch(map_fn, chunk, hi - idx)
+                rec.extra["superseded_by_redispatch"] = True
+                rec.extra["t_wave"] = dt
+                report.records.append(rec)       # keep the attempt's cost
+                t = Timer()
+                # re-materialize the chunk: the first dispatch may have
+                # donated its buffers (PipelinedBackend off-CPU)
+                out, rec = self.backend.dispatch(
+                    map_fn, load(*span), rec.n_instances).result()
+                dt = t.lap()
                 rec.extra["straggler_redispatch"] = True
                 report.speculative_redispatches += 1
-                dt = t.lap()
             wave_times.append(dt)
+            rec.extra["t_wave"] = dt
             report.records.append(rec)
-            outs.append(out)
-            idx = hi
-            wi += 1
-        report.waves = wi
+            outs[wi] = out
+
+        for wi, (lo, hi) in enumerate(bounds):
+            t_start = time.perf_counter()
+            if wave_delay_hook is not None:
+                time.sleep(wave_delay_hook(wi))
+            chunk = load(lo, hi)
+            handle = self.backend.dispatch(map_fn, chunk, hi - lo)
+            in_flight.append((wi, handle, (lo, hi), t_start))
+            # opportunistic in-order drain of waves that already finished
+            while in_flight and in_flight[0][1].poll():
+                harvest(*in_flight.popleft())
+            # honour the backend's pipeline depth (1 = per-wave barrier)
+            while len(in_flight) >= depth:
+                harvest(*in_flight.popleft())
+        while in_flight:
+            harvest(*in_flight.popleft())
+        report.waves = len(bounds)
 
         result = outs
         if reduce_fn is not None:
@@ -126,12 +181,15 @@ def _concat_waves(outs: list) -> Any:
 
 def launch_instances(app_fn: Callable, n: int, item_shape: tuple = (64,),
                      mesh=None, scheduler: str = "array",
-                     wave_size: Optional[int] = None, seed: int = 0) -> tuple:
+                     wave_size: Optional[int] = None, seed: int = 0,
+                     backend: Optional[LaunchBackend] = None,
+                     cache: Optional[CompileCache] = None) -> tuple:
     """Launch ``n`` instances of ``app_fn`` (one input item each); returns
-    (outputs, LaunchRecord-style totals). This is the measured analogue of
-    the paper's 1..16,384 instance sweep."""
+    (outputs, MapReduceReport). This is the measured analogue of the
+    paper's 1..16,384 instance sweep."""
     rng = np.random.default_rng(seed)
     inputs = rng.standard_normal((n,) + item_shape).astype(np.float32)
-    llmr = LLMapReduce(mesh=mesh, scheduler=scheduler, wave_size=wave_size)
+    llmr = LLMapReduce(mesh=mesh, scheduler=scheduler, wave_size=wave_size,
+                       backend=backend, cache=cache)
     outs, report = llmr.map_reduce(app_fn, inputs)
     return outs, report

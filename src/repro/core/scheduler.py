@@ -1,89 +1,30 @@
-"""Schedulers: the paper's comparison axis, adapted to program dispatch.
+"""Deprecated scheduler aliases — the implementations moved to
+``repro.core.backend`` (the unified ``LaunchBackend`` protocol).
 
-``SerialScheduler`` is the heavyweight-VM analogue: every instance pays its
-own trace+compile+stage+dispatch (exactly like booting a VM per task).
-``ArrayScheduler`` is LLMapReduce's array job: ONE trace+compile of a batched
-(vmapped / shard_mapped) program, then a single dispatch covers all N
-instances — per-instance marginal cost is the vmap lane, ~0.
-
-Both are really measured (wall clock) on whatever devices exist; the
-supercomputer-scale projection lives in ``core.launch_model``.
+``SerialScheduler`` / ``ArrayScheduler`` are kept as thin subclasses so
+seed-era imports keep working. New code should construct backends via
+``repro.core.backend.make_backend``. Note the old ``ArrayScheduler._cache``
+dict keyed by ``id(fn)`` is gone: ``id`` is reused after garbage
+collection, which could silently serve a stale executable for a different
+function. Compilation is now keyed by content fingerprint in the shared
+persistent ``CompileCache`` (see ``repro.core.compile_cache``).
 """
 from __future__ import annotations
 
-import time
-from typing import Any, Callable, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.telemetry import LaunchRecord, Timer
+from repro.core.backend import (ArrayBackend, LaunchBackend,  # noqa: F401
+                                PipelinedBackend, SerialBackend,
+                                make_backend)
 
 
-class SerialScheduler:
-    """Per-instance compile + dispatch (VM-style baseline).
-
-    To model the paper's serial scheduler honestly we defeat jax's compile
-    cache per instance by closing over a distinct python constant — each
-    submission is a fresh program, as each VM boot is a fresh environment.
-    """
-
-    name = "serial-vm"
-
-    def launch(self, fn: Callable, inputs: Any, n: int,
-               per_task_overhead_s: float = 0.0) -> tuple:
-        rec = LaunchRecord(self.name, n)
-        t = Timer()
-        outs = []
-        for i in range(n):
-            item = jax.tree_util.tree_map(lambda x: x[i], inputs)
-            salt = i  # defeats the compile cache: a new program per instance
-
-            def inst(x, _s=salt):
-                return fn(x), jnp.asarray(_s)
-
-            outs.append(jax.block_until_ready(jax.jit(inst)(item))[0])
-            if per_task_overhead_s:
-                time.sleep(per_task_overhead_s)
-        rec.t_spawn = t.lap()
-        return outs, rec
+class SerialScheduler(SerialBackend):
+    """Per-instance compile + dispatch (VM-style baseline)."""
 
 
-class ArrayScheduler:
+class ArrayScheduler(ArrayBackend):
     """One array job: compile once, dispatch all N lanes at once."""
 
-    name = "llmr-array"
-
-    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
-                 task_axis: str = "data"):
-        self.mesh = mesh
-        self.task_axis = task_axis
-        self._cache: dict = {}
-
-    def _compile(self, fn, inputs, n):
-        shapes = jax.tree_util.tree_map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), inputs)
-        key = (id(fn), n, str(shapes))
-        if key in self._cache:
-            return self._cache[key], True
-        mapped = jax.vmap(fn)
-        if self.mesh is not None and n % self.mesh.shape[self.task_axis] == 0:
-            sh = jax.sharding.NamedSharding(
-                self.mesh, jax.sharding.PartitionSpec(self.task_axis))
-            jitted = jax.jit(mapped, in_shardings=jax.tree_util.tree_map(
-                lambda _: sh, shapes))
-        else:
-            jitted = jax.jit(mapped)
-        compiled = jitted.lower(shapes).compile()
-        self._cache[key] = compiled
-        return compiled, False
-
-    def launch(self, fn: Callable, inputs: Any, n: int) -> tuple:
-        rec = LaunchRecord(self.name, n)
-        t = Timer()
-        compiled, cached = self._compile(fn, inputs, n)
-        rec.t_schedule = t.lap()      # the ONE scheduler interaction
-        rec.extra["compile_cached"] = cached
-        outs = jax.block_until_ready(compiled(inputs))
-        rec.t_spawn = t.lap()
-        return outs, rec
+    @property
+    def _cache(self) -> dict:
+        # introspection-only view of the memory tier (the seed exposed a
+        # private dict here; tests peeked at it)
+        return self.cache._mem

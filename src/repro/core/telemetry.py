@@ -1,9 +1,18 @@
-"""Launch telemetry: the measurement harness behind Figs 5-7."""
+"""Launch telemetry: the measurement harness behind Figs 5-7.
+
+A ``LaunchRecord`` carries one wave's cost split along the paper's launch
+tree: the scheduler interaction (``t_schedule``), environment staging
+(``t_stage``), program enqueue (``t_dispatch``), time to the first
+completed task (``t_first_result`` — the interactivity metric), and time
+to the last (``t_spawn``). ``fanout`` holds the per-level width of the
+scheduler -> node -> core tree and ``levels()`` maps each level onto its
+measured cost.
+"""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 
 @dataclass
@@ -12,8 +21,10 @@ class LaunchRecord:
     n_instances: int
     t_schedule: float = 0.0      # scheduler interaction (submit) time
     t_stage: float = 0.0         # weight/environment staging ("copy time")
+    t_dispatch: float = 0.0      # program enqueue (async submit) time
     t_spawn: float = 0.0         # instance start ("launch time" proper)
     t_first_result: float = 0.0  # time to first completed task
+    fanout: Dict[str, int] = field(default_factory=dict)  # sched/node/core
     extra: dict = field(default_factory=dict)
 
     @property
@@ -24,13 +35,25 @@ class LaunchRecord:
     def rate(self) -> float:
         return self.n_instances / self.total if self.total > 0 else float("inf")
 
+    def levels(self) -> Dict[str, float]:
+        """Per-level timings of the launch tree: the scheduler level is the
+        one submit, the node level ends at the first completed result, the
+        core level is the drain of the remaining lanes."""
+        return {
+            "sched": self.t_schedule,
+            "node": self.t_first_result,
+            "core": max(self.t_spawn - self.t_first_result, 0.0),
+        }
+
     def row(self) -> str:
         return (f"{self.strategy},{self.n_instances},{self.t_schedule:.4f},"
-                f"{self.t_stage:.4f},{self.t_spawn:.4f},{self.total:.4f},"
+                f"{self.t_stage:.4f},{self.t_spawn:.4f},"
+                f"{self.t_first_result:.4f},{self.total:.4f},"
                 f"{self.rate:.2f}")
 
 
-HEADER = "strategy,n,t_schedule,t_stage,t_spawn,t_total,rate_per_s"
+HEADER = ("strategy,n,t_schedule,t_stage,t_spawn,t_first_result,"
+          "t_total,rate_per_s")
 
 
 class Timer:

@@ -12,6 +12,8 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.core.backend import ArrayBackend
+from repro.core.compile_cache import CompileCache
 from repro.models.lm import lm_init
 from repro.serve.engine import Request, ServeEngine
 
@@ -25,6 +27,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent AOT compile cache dir (default: "
+                         "$REPRO_COMPILE_CACHE_DIR or ~/.cache/repro-aot); "
+                         "a warm dir skips trace+compile entirely")
+    ap.add_argument("--no-cache-spill", action="store_true",
+                    help="keep the compile cache in memory only")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -37,11 +45,19 @@ def main():
                     prompt=rng.integers(0, cfg.vocab, size=args.prompt_len),
                     max_new=args.gen_len)
             for i in range(args.requests)]
-    eng = ServeEngine(cfg, params, slots=args.slots, capacity=args.capacity)
+    cache = CompileCache(cache_dir=args.cache_dir,
+                         persistent=not args.no_cache_spill)
+    backend = ArrayBackend(cache=cache)
+    eng = ServeEngine(cfg, params, slots=args.slots, capacity=args.capacity,
+                      backend=backend)
     stats = eng.run(reqs)
     print(f"served {stats['admitted']} requests, {stats['decoded']} tokens "
           f"in {stats['steps']} batched steps ({stats['wall_s']:.1f}s, "
           f"{stats['decoded'] / stats['wall_s']:.0f} tok/s)")
+    src = stats["compile_sources"]
+    print(f"compile cache: step={src.get('step')} "
+          f"prefills={sorted(v for k, v in src.items() if k != 'step')} "
+          f"stats={cache.stats}")
 
 
 if __name__ == "__main__":

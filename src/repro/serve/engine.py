@@ -1,7 +1,13 @@
 """Batched serving engine: continuous decode over a request pool, launched
 through the Wine ABI. Requests arrive asynchronously; slots are re-armed in
 place (compile-once/serve-many — the serving face of the paper's
-array-launch amortization)."""
+array-launch amortization).
+
+The engine no longer owns its own jit plumbing: the decode step and every
+prefill signature are AOT-compiled through a ``LaunchBackend``'s shared
+persistent ``CompileCache`` — the same cache the launcher uses — so a
+process (or a *later* process) that already launched this model serves its
+first token without paying trace+compile again, and vice versa."""
 from __future__ import annotations
 
 import time
@@ -12,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import ArrayBackend
 from repro.models.lm import cache_init, decode_step, lm_init, prefill
 from repro.models.spec import ModelConfig
 
@@ -29,25 +36,49 @@ class ServeEngine:
     """Fixed-slot batched decoder (static shapes => one compiled program)."""
 
     def __init__(self, cfg: ModelConfig, params, slots: int = 8,
-                 capacity: int = 256):
+                 capacity: int = 256,
+                 backend: Optional[ArrayBackend] = None):
         self.cfg, self.params = cfg, params
         self.slots, self.capacity = slots, capacity
+        self.backend = backend if backend is not None else ArrayBackend()
         self.caches = cache_init(cfg, slots, capacity)
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
         self.pos = jnp.zeros((slots, 1), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
-        self._step = jax.jit(
-            lambda p, c, t, po: decode_step(p, c, t, po, cfg))
-        self._prefill = jax.jit(
-            lambda p, t: prefill(p, {"tokens": t}, cfg, capacity=capacity))
-        self.stats = {"decoded": 0, "admitted": 0, "steps": 0}
+        self.stats = {"decoded": 0, "admitted": 0, "steps": 0,
+                      "compile_sources": {}}
+
+        def step_fn(p, c, t, po):
+            return decode_step(p, c, t, po, cfg)
+
+        self._step, src = self.backend.compile(
+            step_fn, (params, self.caches, self.tokens, self.pos),
+            extras=("serve-step", cfg.name, slots, capacity))
+        self.stats["compile_sources"]["step"] = src
+        self._prefill_by_len: dict = {}   # prompt length -> AOT executable
+
+    def _prefill(self, tokens):
+        """AOT prefill, one executable per prompt length, shared-cache."""
+        compiled = self._prefill_by_len.get(tokens.shape)
+        if compiled is None:
+            cfg, capacity = self.cfg, self.capacity
+
+            def prefill_fn(p, t):
+                return prefill(p, {"tokens": t}, cfg, capacity=capacity)
+
+            compiled, src = self.backend.compile(
+                prefill_fn, (self.params, tokens),
+                extras=("serve-prefill", cfg.name, capacity))
+            self._prefill_by_len[tokens.shape] = compiled
+            self.stats["compile_sources"][f"prefill_s{tokens.shape[1]}"] = src
+        return compiled(self.params, tokens)
 
     def admit(self, req: Request) -> bool:
         """Prefill a request into a free slot (one-slot batch prefill)."""
         for i, a in enumerate(self.active):
             if a is None:
                 logits, caches = self._prefill(
-                    self.params, jnp.asarray(req.prompt)[None])
+                    jnp.asarray(req.prompt, jnp.int32)[None])
                 # write slot i of every cache leaf
                 def put(dst, src):
                     return jax.lax.dynamic_update_index_in_dim(

@@ -1,30 +1,68 @@
 """LLMapReduce launcher invariants (the paper's mechanism), incl. hypothesis
 property tests: every task runs exactly once, reduce correctness, wave
-splitting, straggler re-dispatch, serial == array results."""
+splitting, straggler re-dispatch, and serial == array == pipelined results
+through the unified LaunchBackend protocol."""
+import gc
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core.backend import ArrayBackend, PipelinedBackend, SerialBackend
+from repro.core.compile_cache import CompileCache, fingerprint
 from repro.core.llmr import LLMapReduce
 from repro.core.scheduler import ArrayScheduler, SerialScheduler
+
+BACKEND_KINDS = ("serial", "array", "pipelined")
 
 
 def app(x):
     return (x * 2.0).sum(axis=-1)
 
 
+@pytest.fixture()
+def cache(tmp_path):
+    return CompileCache(cache_dir=str(tmp_path / "aot"))
+
+
+def _llmr(kind, cache, **kw):
+    if kind == "serial":
+        return LLMapReduce(scheduler="serial", **kw)
+    return LLMapReduce(scheduler=kind, cache=cache, **kw)
+
+
+def _flat(out):
+    if isinstance(out, list):
+        return np.asarray([np.asarray(o) for o in out])
+    return np.asarray(out)
+
+
+@pytest.mark.parametrize("kind", ("array", "pipelined"))
 @given(n=st.integers(1, 64), wave=st.integers(1, 17))
 @settings(max_examples=15, deadline=None)
-def test_every_task_exactly_once(n, wave):
+def test_every_task_exactly_once(kind, n, wave):
     inputs = np.arange(n * 4, dtype=np.float32).reshape(n, 4)
-    llmr = LLMapReduce(wave_size=wave)
+    llmr = LLMapReduce(wave_size=wave, scheduler=kind)
     out, report = llmr.map_reduce(app, inputs)
-    np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 2.0,
-                               rtol=1e-6)
+    np.testing.assert_allclose(_flat(out), inputs.sum(-1) * 2.0, rtol=1e-6)
     assert report.waves == -(-n // wave)
     assert report.n_instances == n
+
+
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_backends_produce_identical_outputs(kind, cache):
+    """The protocol's contract: any backend, same outputs for same inputs."""
+    inputs = np.random.default_rng(0).standard_normal((12, 4)).astype(
+        np.float32)
+    expect = inputs.sum(-1) * 2.0
+    out, report = _llmr(kind, cache, wave_size=5).map_reduce(app, inputs)
+    np.testing.assert_allclose(_flat(out), expect, rtol=1e-6)
+    assert report.n_instances == 12
+    for rec in report.records:
+        assert rec.t_first_result > 0.0          # the dead field is wired
+        assert rec.t_first_result <= rec.t_spawn + 1e-9
 
 
 def test_reduce_applied():
@@ -45,14 +83,193 @@ def test_serial_equals_array_results():
                                rtol=1e-6)
 
 
-def test_array_compile_cache_hits():
-    sched = ArrayScheduler()
+def test_pipelined_equals_array_results(cache):
+    inputs = np.random.default_rng(3).standard_normal((32, 4)).astype(
+        np.float32)
+    out_a, _ = _llmr("array", cache, wave_size=8).map_reduce(app, inputs)
+    out_p, rep = _llmr("pipelined", cache, wave_size=8).map_reduce(app, inputs)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_p), rtol=1e-6)
+    assert rep.waves == 4
+    assert rep.records[0].strategy == "llmr-pipelined"
+
+
+def test_hierarchical_fanout_preserves_results(cache):
+    """Two-level node/core waves: same outputs, fan-out recorded."""
+    inputs = np.random.default_rng(1).standard_normal((16, 4)).astype(
+        np.float32)
+    be = ArrayBackend(cache=cache, inner_lanes=4)
+    out, rec = be.launch(app, inputs, 16)
+    np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 2.0,
+                               rtol=1e-6)
+    assert rec.fanout == {"sched": 1, "node": 4, "core": 4}
+    lv = rec.levels()
+    assert set(lv) == {"sched", "node", "core"} and all(
+        v >= 0 for v in lv.values())
+
+
+def test_array_compile_cache_hits(cache):
+    sched = ArrayBackend(cache=cache)
     inputs = np.ones((8, 4), np.float32)
     _, rec1 = sched.launch(app, inputs, 8)
     _, rec2 = sched.launch(app, inputs, 8)
     assert not rec1.extra["compile_cached"]
     assert rec2.extra["compile_cached"]
     assert rec2.t_schedule <= rec1.t_schedule
+
+
+def test_compile_cache_key_is_content_not_id(cache):
+    """Regression: the seed keyed ArrayScheduler._cache by id(fn); after
+    gc, CPython reuses addresses, so a NEW function could silently get the
+    OLD function's executable. The fingerprint key must not alias."""
+    sched = ArrayBackend(cache=cache)
+    inputs = np.ones((8, 4), np.float32)
+
+    def make(scale):
+        def fn(x, _s=scale):
+            return (x * _s).sum(axis=-1)
+        return fn
+
+    f1 = make(2.0)
+    fp1 = fingerprint(f1, (inputs,))
+    out1, _ = sched.launch(f1, inputs, 8)
+    np.testing.assert_allclose(np.asarray(out1), np.full(8, 8.0))
+    old_id = id(f1)
+    del f1, out1
+    gc.collect()
+    # allocate until the address is reused (CPython frees eagerly, so the
+    # very next same-shaped function object usually lands on it)
+    f2 = None
+    for _ in range(64):
+        cand = make(10.0)
+        if id(cand) == old_id:
+            f2 = cand
+            break
+        del cand
+    if f2 is None:                 # address not reused on this runtime:
+        f2 = make(10.0)            # still assert key soundness below
+    assert fingerprint(f2, (inputs,)) != fp1
+    out2, _ = sched.launch(f2, inputs, 8)
+    np.testing.assert_allclose(np.asarray(out2), np.full(8, 40.0))
+
+
+def test_fingerprint_hashes_closure_array_values(cache):
+    """Regression: jit bakes closed-over arrays into the program as
+    constants, so two closures over same-shaped but different-valued
+    weights are DIFFERENT programs and must not alias in the cache."""
+    sched = ArrayBackend(cache=cache)
+    inputs = np.ones((4, 3), np.float32)
+
+    def make(w):
+        def fn(v):
+            return (v * w).sum(axis=-1)
+        return fn
+
+    f1 = make(np.full(3, 2.0, np.float32))
+    f2 = make(np.full(3, 10.0, np.float32))
+    assert fingerprint(f1, (inputs,)) != fingerprint(f2, (inputs,))
+    out1, _ = sched.launch(f1, inputs, 4)
+    out2, _ = sched.launch(f2, inputs, 4)
+    np.testing.assert_allclose(np.asarray(out1), np.full(4, 6.0))
+    np.testing.assert_allclose(np.asarray(out2), np.full(4, 30.0))
+
+
+def test_fingerprint_sees_indirect_closure_values():
+    """Regression: a launched fn may CALL an inner function whose closure
+    holds the data; the fingerprint must reach one level through the
+    referenced callable, not just hash its bytecode."""
+    inputs = np.ones((4, 3), np.float32)
+
+    def make(w):
+        def inner(x):
+            return x * w
+
+        def outer(x):
+            return inner(x).sum(axis=-1)
+        return outer
+
+    f1 = make(np.full(3, 2.0, np.float32))
+    f2 = make(np.full(3, 10.0, np.float32))
+    assert fingerprint(f1, (inputs,)) != fingerprint(f2, (inputs,))
+
+
+def test_fingerprint_sees_arrays_inside_containers():
+    """Regression: a closed-over params DICT must contribute its arrays'
+    VALUES to the key (repr of a large array truncates to corner values,
+    which would alias different weights)."""
+    inputs = np.ones((4, 64), np.float32)
+
+    def make(params):
+        def fn(x):
+            return (x @ params["w"]).sum(axis=-1)
+        return fn
+
+    w1 = np.zeros((64, 64), np.float32)
+    w2 = np.zeros((64, 64), np.float32)
+    w2[10, 10] = 99.0              # interior change: repr() is identical
+    assert (fingerprint(make({"w": w1}), (inputs,))
+            != fingerprint(make({"w": w2}), (inputs,)))
+    # and a change past any truncation horizon of a LARGE container
+    big1 = {f"w{i}": np.float32(i) for i in range(24)}
+    big2 = dict(big1, w20=np.float32(999.0))
+    assert (fingerprint(make(big1), (inputs,))
+            != fingerprint(make(big2), (inputs,)))
+
+
+_SCALE = 2.0
+
+
+def test_fingerprint_tracks_global_rebinding():
+    """Regression: rebinding a module global referenced by the launched fn
+    must change the key (no stale memoized digest)."""
+    global _SCALE
+
+    def fn(x):
+        return x * _SCALE
+
+    a = np.ones((4, 3), np.float32)
+    _SCALE = 2.0
+    fp1 = fingerprint(fn, (a,))
+    try:
+        _SCALE = 10.0
+        assert fingerprint(fn, (a,)) != fp1
+    finally:
+        _SCALE = 2.0
+
+
+def test_fingerprint_stable_and_shape_sensitive():
+    a = np.ones((8, 4), np.float32)
+    assert fingerprint(app, (a,)) == fingerprint(app, (a,))
+    assert fingerprint(app, (a,)) != fingerprint(app, (np.ones((4, 4),
+                                                             np.float32),))
+
+
+def test_fingerprint_tracks_in_place_array_mutation():
+    """Closed-over array VALUES are part of the key even when mutated in
+    place (the memoization fast path must not capture a stale digest)."""
+    w = np.full(3, 2.0, np.float32)
+
+    def fn(x):
+        return (x * w).sum(axis=-1)
+
+    a = np.ones((4, 3), np.float32)
+    fp1 = fingerprint(fn, (a,))
+    assert fingerprint(fn, (a,)) == fp1      # repeat call: same key
+    w[:] = 10.0                              # in-place mutation
+    assert fingerprint(fn, (a,)) != fp1
+
+
+def test_compile_cache_persists_across_instances(tmp_path):
+    """A fresh CompileCache over the same dir = a new process: the warm
+    path must come from disk and skip compile."""
+    d = str(tmp_path / "aot")
+    inputs = np.ones((8, 4), np.float32)
+    _, rec1 = ArrayBackend(cache=CompileCache(cache_dir=d)).launch(
+        app, inputs, 8)
+    _, rec2 = ArrayBackend(cache=CompileCache(cache_dir=d)).launch(
+        app, inputs, 8)
+    assert rec1.extra["compile_source"] == "compiled"
+    assert rec2.extra["compile_source"] == "disk"
+    assert rec2.t_schedule < rec1.t_schedule
 
 
 def test_straggler_speculative_redispatch():
@@ -64,6 +281,28 @@ def test_straggler_speculative_redispatch():
         app, inputs, wave_delay_hook=lambda w: delays.get(w, 0.0))
     assert report.speculative_redispatches >= 1
     np.testing.assert_allclose(np.asarray(out), np.full(16, 8.0), rtol=1e-6)
+
+
+def test_straggler_accounting_keeps_both_attempts():
+    """Regression: the seed dropped the re-run's record, so the first
+    attempt's cost vanished from the report. Both attempts must appear,
+    but instances are only counted once."""
+    inputs = np.ones((16, 4), np.float32)
+    llmr = LLMapReduce(wave_size=4, straggler_factor=2.0)
+    _, report = llmr.map_reduce(
+        app, inputs, wave_delay_hook=lambda w: {2: 1.0}.get(w, 0.0))
+    assert report.speculative_redispatches >= 1
+    superseded = [r for r in report.records
+                  if r.extra.get("superseded_by_redispatch")]
+    reruns = [r for r in report.records
+              if r.extra.get("straggler_redispatch")]
+    assert len(superseded) == report.speculative_redispatches
+    assert len(reruns) == report.speculative_redispatches
+    assert len(report.records) == report.waves + report.speculative_redispatches
+    assert report.n_instances == 16                       # no double count
+    assert report.n_attempts == 16 + 4 * len(reruns)      # cost retained
+    # the straggler attempt's wall time (incl. its delay) stays visible
+    assert superseded[0].extra["t_wave"] > reruns[0].extra["t_wave"]
 
 
 def test_launch_rate_array_beats_serial():
@@ -78,6 +317,16 @@ def test_launch_rate_array_beats_serial():
     LLMapReduce(scheduler="serial").map_reduce(app, inputs)
     t_serial = time.perf_counter() - t0
     assert t_serial > 3.0 * t_array, (t_serial, t_array)
+
+
+def test_deprecated_scheduler_aliases_still_work():
+    inputs = np.ones((6, 4), np.float32)
+    outs, rec = SerialScheduler().launch(app, inputs, 6)
+    assert len(outs) == 6
+    sched = ArrayScheduler()
+    out, rec = sched.launch(app, inputs, 6)
+    np.testing.assert_allclose(np.asarray(out), np.full(6, 8.0))
+    assert isinstance(sched._cache, dict) and sched._cache  # compat view
 
 
 def test_launch_model_headline():

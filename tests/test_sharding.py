@@ -12,11 +12,15 @@ from repro.sharding.partition import (ACT_RULES, PARAM_RULES, cache_sharding,
 
 
 def mesh2(data=4, model=2):
-    n = len(jax.devices())
     # build a logical mesh over repeated devices is not allowed; use a
-    # small abstract mesh via AbstractMesh for spec resolution tests
+    # small abstract mesh via AbstractMesh for spec resolution tests.
+    # AbstractMesh's signature changed across jax versions: 0.4.x takes
+    # ((name, size), ...), newer takes (sizes, names).
     from jax.sharding import AbstractMesh
-    return AbstractMesh((data, model), ("data", "model"))
+    try:
+        return AbstractMesh((("data", data), ("model", model)))
+    except TypeError:
+        return AbstractMesh((data, model), ("data", "model"))
 
 
 def test_divisible_dims_get_sharded():
