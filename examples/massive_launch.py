@@ -5,7 +5,11 @@ k executes), with straggler telemetry, per-level launch-tree timings, a
 persistent AOT compile cache, plus the paper-scale model comparison.
 
     PYTHONPATH=src python examples/massive_launch.py [--n 16384]
-        [--backend pipelined|array|serial] [--compare]
+        [--wave auto|<int>] [--backend pipelined|array|serial] [--compare]
+
+``--wave auto`` engages the measured-telemetry WaveController: wave sizes
+(and node/core fan-out) are picked per wave from t_schedule /
+t_first_result / drain, AIMD-style, instead of a static knob.
 """
 import argparse
 import time
@@ -34,9 +38,14 @@ def run_launch(kind, cache, args, inputs):
 
 
 def main():
+    def wave_arg(v):
+        return v if v == "auto" else int(v)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=16384)
-    ap.add_argument("--wave", type=int, default=4096)
+    ap.add_argument("--wave", type=wave_arg, default="auto",
+                    help='wave size, or "auto" for the measured-telemetry '
+                         "WaveController (default)")
     ap.add_argument("--backend", default="pipelined",
                     choices=("pipelined", "array", "serial"))
     ap.add_argument("--compare", action="store_true",
@@ -68,6 +77,10 @@ def main():
           f"first result after {r0.t_first_result * 1e3:.1f} ms, "
           f"compile={r0.extra.get('compile_source', 'n/a')})")
     print(f"reduce result {float(outs):.1f} in {report.t_reduce * 1e3:.1f} ms")
+    if report.autoscale:
+        picks = ", ".join(f"{d.wave}({d.reason.split(':')[0]})"
+                          for d in report.autoscale)
+        print(f"autoscaled waves: {picks}")
     print("\nper-wave launch records (per-level: sched -> node -> core):")
     print(table(report.records[:4], title=f"first waves of {args.n}"))
     if args.compare:

@@ -34,6 +34,7 @@ may still be computing. Synchronous backends advertise
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
@@ -95,6 +96,24 @@ class WaveHandle:
             self._harvested = True
         return self.out, self.rec
 
+    def abandon(self):
+        """Finalize this attempt's record WITHOUT blocking on the device.
+
+        Used when a speculative re-dispatch won the race: the losing
+        attempt's cost must stay visible in the report, but the driver
+        must not barrier on outputs nobody will consume (the device
+        finishes or drops them asynchronously; tasks are idempotent).
+        Timings are best-effort: t_spawn is the wall clock up to the
+        moment of abandonment."""
+        if not self._harvested:
+            now = time.perf_counter()
+            self.rec.t_spawn = now - self.t0
+            self.rec.t_first_result = (self._t_first
+                                       if self._t_first is not None
+                                       else self.rec.t_spawn)
+            self.rec.extra["abandoned"] = True
+        return self.rec
+
 
 @runtime_checkable
 class LaunchBackend(Protocol):
@@ -106,6 +125,10 @@ class LaunchBackend(Protocol):
     def dispatch(self, fn: Callable, chunk: Any, n: int) -> WaveHandle: ...
 
     def launch(self, fn: Callable, inputs: Any, n: int) -> tuple: ...
+
+    # Backends whose waves have a node/core hierarchy additionally set
+    # ``supports_lane_override = True`` and accept a per-dispatch
+    # ``inner_lanes=`` keyword (used by wave autoscaling).
 
 
 # ----------------------------------------------------------------------
@@ -142,12 +165,26 @@ class SerialBackend:
             def inst(x, _s=salt):
                 return fn(x), jnp.asarray(_s)
 
-            outs.append(jax.block_until_ready(jax.jit(inst)(item))[0])
+            # the per-task scheduler interaction — trace+lower+compile of
+            # a fresh program plus any modeled submit latency — is exactly
+            # the cost the paper's ONE array submission eliminates; it
+            # must show up in t_schedule, not hide inside t_spawn
+            ts = time.perf_counter()
+            compiled = jax.jit(inst).lower(item).compile()
+            rec.t_schedule += time.perf_counter() - ts
+            outs.append(jax.block_until_ready(compiled(item))[0])
             if i == 0:
-                rec.t_first_result = time.perf_counter() - t0
+                # execution-side time to the first result (its submit cost
+                # is under t_schedule), so sched/node/core partition the
+                # wall clock exactly
+                rec.t_first_result = (time.perf_counter() - t0
+                                      - rec.t_schedule)
             if overhead:
                 time.sleep(overhead)
-        rec.t_spawn = t.lap()
+                rec.t_schedule += overhead
+        # t_spawn is the execution remainder so `total` (= t_schedule +
+        # t_stage + t_spawn) stays the measured wall clock of the loop
+        rec.t_spawn = max(t.lap() - rec.t_schedule, 0.0)
         return outs, rec
 
     def dispatch(self, fn: Callable, chunk: Any, n: int) -> WaveHandle:
@@ -166,6 +203,8 @@ class ArrayBackend:
 
     name = "llmr-array"
     max_in_flight = 1
+    # the policy layer (autoscaling controller) may pick a fan-out per wave
+    supports_lane_override = True
 
     def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
                  task_axis: str = "data",
@@ -178,6 +217,7 @@ class ArrayBackend:
         self.cache = cache if cache is not None else default_cache()
         # buffer donation is a no-op (warning) on CPU backends
         self.donate = donate and jax.default_backend() != "cpu"
+        self._warned_lane_fallback = False
 
     # -- general-purpose AOT compile through the shared cache -------------
     def compile(self, fn: Callable, example_args: tuple,
@@ -188,15 +228,31 @@ class ArrayBackend:
                                   extras=extras)
 
     # -- wave planning ----------------------------------------------------
-    def _plan(self, n: int) -> tuple:
-        """-> (outer, inner): node-level x core-level fan-out of a wave."""
-        inner = self.inner_lanes
-        if inner and inner > 1 and n % inner == 0:
-            return n // inner, inner
-        return n, 1
+    def _plan(self, n: int, inner_lanes: Optional[int] = None) -> tuple:
+        """-> (outer, inner, fell_back): node x core fan-out of a wave.
 
-    def _compile_wave(self, fn: Callable, chunk: Any, n: int) -> tuple:
-        outer, inner = self._plan(n)
+        ``fell_back`` is True when a requested ``inner_lanes`` does not
+        divide the wave and the plan degrades to a flat ``(n, 1)`` vmap —
+        the caller records the dropped fan-out config instead of silently
+        discarding it."""
+        inner = self.inner_lanes if inner_lanes is None else inner_lanes
+        if inner and inner > 1:
+            if n % inner == 0:
+                return n // inner, inner, False
+            return n, 1, True
+        return n, 1, False
+
+    def _compile_wave(self, fn: Callable, chunk: Any, n: int,
+                      inner_lanes: Optional[int] = None) -> tuple:
+        outer, inner, fell_back = self._plan(n, inner_lanes)
+        requested = self.inner_lanes if inner_lanes is None else inner_lanes
+        if fell_back and not self._warned_lane_fallback:
+            warnings.warn(
+                f"inner_lanes={requested} does not divide wave size {n}; "
+                f"falling back to flat ({n}, 1) fan-out — the node/core "
+                f"hierarchy you configured is NOT in effect for such waves",
+                RuntimeWarning, stacklevel=3)
+            self._warned_lane_fallback = True
         if inner > 1:
             mapped = jax.vmap(jax.vmap(fn))
             chunk = jax.tree_util.tree_map(
@@ -214,19 +270,26 @@ class ArrayBackend:
             in_shardings=in_shardings,
             donate_argnums=(0,) if self.donate else (),
             extras=("wave", outer, inner))
-        return compiled, source, chunk, (outer, inner)
+        return compiled, source, chunk, (outer, inner, fell_back, requested)
 
     # -- LaunchBackend ----------------------------------------------------
-    def dispatch(self, fn: Callable, chunk: Any, n: int) -> WaveHandle:
+    def dispatch(self, fn: Callable, chunk: Any, n: int,
+                 inner_lanes: Optional[int] = None) -> WaveHandle:
         """Enqueue one wave. Under JAX async dispatch this returns as soon
-        as the program is submitted; the WaveHandle's outputs are futures."""
+        as the program is submitted; the WaveHandle's outputs are futures.
+        ``inner_lanes`` overrides the backend default for THIS wave (the
+        autoscaling controller re-plans the node/core fan-out per wave)."""
         rec = LaunchRecord(self.name, n)
         t = Timer()
-        compiled, source, staged, (outer, inner) = self._compile_wave(
-            fn, chunk, n)
+        compiled, source, staged, plan = self._compile_wave(
+            fn, chunk, n, inner_lanes)
+        outer, inner, fell_back, requested = plan
         rec.t_schedule = t.lap()      # the ONE scheduler interaction
         rec.extra["compile_source"] = source
         rec.extra["compile_cached"] = source != "compiled"
+        if fell_back:
+            rec.extra["inner_lanes_fallback"] = {
+                "requested": requested, "wave": n, "used": (outer, inner)}
         rec.fanout = {"sched": 1, "node": outer, "core": inner}
         t0 = time.perf_counter()
         out = compiled(staged)
@@ -281,9 +344,14 @@ def make_backend(kind: str, mesh: Optional[jax.sharding.Mesh] = None,
     For 'serial', ``mesh``/``cache`` are accepted but meaningless (the
     per-instance VM baseline uses neither); any other kwargs are passed
     through, so unsupported options fail loudly instead of being dropped.
+    ``inner_lanes="auto"`` defers the node/core fan-out to the policy
+    layer's ``WaveController`` (the backend keeps no static default and
+    each wave's lanes arrive via ``dispatch(..., inner_lanes=...)``).
     """
     if kind == "serial":
         return SerialBackend(**kwargs)
+    if kwargs.get("inner_lanes") == "auto":
+        kwargs["inner_lanes"] = None     # per-wave override drives fan-out
     try:
         cls = BACKENDS[kind]
     except KeyError:

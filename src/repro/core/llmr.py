@@ -11,25 +11,39 @@ task axis is vmapped/sharded across the mesh; levels are (program dispatch ->
 mesh `data` axis -> vmap lanes). Tasks too numerous for one program dispatch
 are split into WAVES.
 
-This class is pure POLICY: wave slicing, in-flight depth, straggler
-mitigation (speculative re-dispatch of outlier waves), and the reduce step.
-All mechanism lives behind the ``LaunchBackend`` protocol
-(``repro.core.backend``): a synchronous backend (serial, array) is harvested
-wave-by-wave, exactly the seed behaviour; ``PipelinedBackend`` advertises
-``max_in_flight > 1`` and the driver keeps that many waves in flight,
-slicing and enqueueing wave k+1 while wave k executes, harvesting by
-non-blocking readiness polls.
+This class is pure POLICY: wave slicing (fixed-size or autoscaled by the
+``WaveController``), in-flight depth, straggler mitigation, and the reduce
+step. All mechanism lives behind the ``LaunchBackend`` protocol
+(``repro.core.backend``).
+
+The driver is ONE poll/harvest loop for every backend. A synchronous
+backend (serial, array) advertises ``max_in_flight == 1`` and behaves
+wave-at-a-time; ``PipelinedBackend`` advertises its depth and the driver
+keeps that many waves in flight, slicing and enqueueing wave k+1 while
+wave k executes, harvesting by non-blocking readiness polls — in ANY
+completion order, so no wave ever waits on a wave it does not depend on.
+
+Straggler mitigation is barrier-free (LLMapReduce re-dispatches outliers
+without pausing the array job, per Byun et al.): when an in-flight wave's
+wall clock is an outlier versus the rolling median of completed waves, a
+speculative duplicate is enqueued as a SECOND in-flight attempt of the
+same wave. First attempt to become ready wins; the loser is abandoned
+without blocking and its record is kept (``superseded_by_redispatch``),
+so the report still shows both attempts' cost while counting the work
+once. Other in-flight waves keep harvesting the whole time — the old
+driver's synchronous re-run inside the harvest barrier stalled every
+other wave for the full straggler delay.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, Optional, Union
 
 import jax
 import numpy as np
 
+from repro.core.autoscale import WaveController, WaveDecision
 from repro.core.backend import LaunchBackend, make_backend
 from repro.core.compile_cache import CompileCache
 from repro.core.telemetry import LaunchRecord, Timer
@@ -42,6 +56,7 @@ class MapReduceReport:
     speculative_redispatches: int = 0
     t_reduce: float = 0.0
     t_total: float = 0.0
+    autoscale: List[WaveDecision] = field(default_factory=list)
 
     @property
     def n_instances(self) -> int:
@@ -59,19 +74,73 @@ class MapReduceReport:
         return self.n_instances / self.t_total if self.t_total else float("inf")
 
 
+class _DelayedHandle:
+    """Test-only straggler injection: defers the READINESS of a dispatched
+    wave by ``delay`` seconds without blocking the driver — the injected
+    analogue of a slow node (a real cluster gets the same signal from wave
+    wall clock). Wraps the backend's real ``WaveHandle``."""
+
+    def __init__(self, inner, delay: float):
+        self._inner = inner
+        self._delay = delay
+        self.rec = inner.rec
+        self.t0 = inner.t0
+
+    def _elapsed(self) -> float:
+        return time.perf_counter() - self.t0
+
+    def poll(self) -> bool:
+        if self._elapsed() < self._delay:
+            return False
+        return self._inner.poll()
+
+    def result(self) -> tuple:
+        remaining = self._delay - self._elapsed()
+        if remaining > 0:
+            time.sleep(remaining)
+        return self._inner.result()
+
+    def abandon(self):
+        return self._inner.abandon()
+
+
+@dataclass
+class _Slot:
+    """One logical wave in flight; may carry a speculative second attempt."""
+    wi: int
+    span: tuple                       # (lo, hi) into the input set
+    t_start: float
+    attempts: list                    # WaveHandle-likes; [orig, dup?]
+    t_attempt: list                   # dispatch perf_counter per attempt
+    lanes: Optional[int] = None       # inner_lanes the wave ran with
+
+
 class LLMapReduce:
     """``out = reduce(map(fn, inputs))`` with array-job launch semantics."""
 
     def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
-                 wave_size: Optional[int] = None,
+                 wave_size: Optional[Union[int, str]] = None,
                  straggler_factor: float = 3.0,
+                 min_straggler_s: float = 0.25,
                  scheduler: str = "array",
                  backend: Optional[LaunchBackend] = None,
                  cache: Optional[CompileCache] = None,
-                 inner_lanes: Optional[int] = None):
+                 inner_lanes: Optional[Union[int, str]] = None,
+                 controller: Optional[Callable[..., WaveController]] = None):
+        """``wave_size`` is an int (fixed waves), ``None`` (one wave), or
+        ``"auto"`` — a fresh ``WaveController`` per ``map_reduce`` call
+        sizes every wave (and its ``inner_lanes`` fan-out) from measured
+        telemetry. ``controller`` overrides the controller factory
+        (signature ``controller(n_tasks=..., devices=...)``).
+
+        ``straggler_factor`` and ``min_straggler_s`` gate speculative
+        re-dispatch: an in-flight wave is an outlier once its wall clock
+        exceeds ``max(straggler_factor * median, min_straggler_s)``."""
         self.mesh = mesh
         self.wave_size = wave_size
         self.straggler_factor = straggler_factor
+        self.min_straggler_s = min_straggler_s
+        self.controller_factory = controller
         if backend is None:
             kwargs = {} if scheduler == "serial" else {
                 "cache": cache, "inner_lanes": inner_lanes}
@@ -91,8 +160,10 @@ class LLMapReduce:
         pipelined backend, wave k+1's loader call overlaps wave k's device
         execution. Returns (out, report).
 
-        wave_delay_hook(wave_idx) -> extra seconds (test-only straggler
-        injection; a real cluster gets this signal from wave wall-clock).
+        wave_delay_hook(wave_idx) -> extra seconds of injected wave
+        latency (test-only straggler injection, applied to the wave's
+        readiness, not the driver). Loaders must be pure: a straggler's
+        chunk is re-materialized for the speculative duplicate.
         """
         if callable(inputs):
             if n_tasks is None:
@@ -104,64 +175,190 @@ class LLMapReduce:
 
             def load(lo, hi):
                 return jax.tree_util.tree_map(lambda x: x[lo:hi], inputs)
-        wave = self.wave_size or n
+
+        controller: Optional[WaveController] = None
+        if self.wave_size == "auto":
+            factory = self.controller_factory or WaveController
+            controller = factory(n_tasks=n, devices=len(jax.devices()))
+        wave = n if controller else (self.wave_size or n)
         depth = max(1, getattr(self.backend, "max_in_flight", 1))
+        lanes_ok = getattr(self.backend, "supports_lane_override", False)
         report = MapReduceReport()
         t_all = Timer()
         wave_times: List[float] = []
-        bounds = [(lo, min(lo + wave, n)) for lo in range(0, n, wave)]
-        outs: List[Any] = [None] * len(bounds)
-        in_flight: deque = deque()   # (wave_idx, handle, (lo, hi), t_start)
+        outs: dict = {}
+        slots: List[_Slot] = []
+        state = {"lo": 0, "wi": 0}
 
-        def harvest(wi, handle, span, t_start):
-            out, rec = handle.result()
-            dt = time.perf_counter() - t_start
-            # straggler mitigation: if this wave is an outlier vs the median
-            # of completed waves, speculatively re-dispatch it (idempotent
-            # tasks; first result wins — here the re-run, which has no delay)
-            if (len(wave_times) >= 2
-                    and dt > self.straggler_factor * float(np.median(wave_times))):
+        # -- the unified poll/harvest loop's moves ----------------------
+        def threshold() -> Optional[float]:
+            """Outlier bar: None until a median baseline exists."""
+            if len(wave_times) < 2:
+                return None
+            med = float(np.median(wave_times))
+            if med <= 0:
+                return None
+            return max(self.straggler_factor * med, self.min_straggler_s)
+
+        def dispatch_next() -> None:
+            lo, wi = state["lo"], state["wi"]
+            lanes = None
+            if controller is not None:
+                decision = controller.next_wave(n - lo)
+                w, lanes = decision.wave, decision.inner_lanes
+                report.autoscale.append(decision)
+            else:
+                w = wave
+            hi = min(lo + w, n)
+            chunk = load(lo, hi)
+            lanes = lanes if (lanes and lanes_ok) else None
+            kw = {"inner_lanes": lanes} if lanes else {}
+            t0 = time.perf_counter()
+            handle = self.backend.dispatch(map_fn, chunk, hi - lo, **kw)
+            if wave_delay_hook is not None:
+                d = wave_delay_hook(wi)
+                if d:
+                    handle = _DelayedHandle(handle, d)
+            handle.rec.extra["wave"] = wi
+            if controller is not None:
+                handle.rec.extra["autoscale"] = decision.as_extra()
+            slots.append(_Slot(wi, (lo, hi), t0, [handle], [t0],
+                               lanes=lanes))
+            state["lo"], state["wi"] = hi, wi + 1
+
+        def redispatch(slot: _Slot):
+            """Re-dispatch a slot's wave with the SAME plan (inner_lanes)
+            as the attempt it races — same compiled program, warm cache."""
+            lo, hi = slot.span
+            kw = {"inner_lanes": slot.lanes} if slot.lanes else {}
+            h = self.backend.dispatch(map_fn, load(lo, hi), hi - lo, **kw)
+            h.rec.extra["wave"] = slot.wi
+            return h
+
+        def speculate(slot: _Slot) -> None:
+            """Enqueue a speculative duplicate as a second in-flight
+            attempt — no barrier, first-ready-wins (idempotent tasks)."""
+            t0 = time.perf_counter()
+            slot.attempts.append(redispatch(slot))
+            slot.t_attempt.append(t0)
+            report.speculative_redispatches += 1
+
+        def check_stragglers() -> None:
+            thr = threshold()
+            if thr is None:
+                return
+            now = time.perf_counter()
+            for slot in slots:
+                if len(slot.attempts) == 1 and now - slot.t_start > thr:
+                    speculate(slot)
+
+        def harvest(slot: _Slot, winner: int) -> None:
+            out, rec = slot.attempts[winner].result()
+            now = time.perf_counter()
+            dt = now - slot.t_attempt[winner]
+            for j, h in enumerate(slot.attempts):
+                if j == winner:
+                    continue
+                lrec = h.abandon()
+                lrec.extra["superseded_by_redispatch"] = True
+                lrec.extra["t_wave"] = now - slot.t_attempt[j]
+                report.records.append(lrec)
+            if winner > 0:
+                rec.extra["straggler_redispatch"] = True
+            thr = threshold()
+            if (depth == 1 and winner == 0 and len(slot.attempts) == 1
+                    and thr is not None and dt > thr):
+                # post-hoc outlier on a DEPTH-1 backend, whose dispatch
+                # blocks and never gets polled in flight: fall back to
+                # the synchronous re-run — with the only slot already
+                # harvested there is nothing in flight to stall. Pipelined
+                # backends never take this path: a wave that merely
+                # finished a bit late (e.g. its dt includes a cold compile
+                # of a new wave shape) has a perfectly good result, and
+                # re-running it would resurrect the harvest barrier.
                 rec.extra["superseded_by_redispatch"] = True
                 rec.extra["t_wave"] = dt
-                report.records.append(rec)       # keep the attempt's cost
-                t = Timer()
-                # re-materialize the chunk: the first dispatch may have
-                # donated its buffers (PipelinedBackend off-CPU)
-                out, rec = self.backend.dispatch(
-                    map_fn, load(*span), rec.n_instances).result()
-                dt = t.lap()
+                report.records.append(rec)
+                t0 = time.perf_counter()
+                out, rec = redispatch(slot).result()
+                dt = time.perf_counter() - t0
                 rec.extra["straggler_redispatch"] = True
                 report.speculative_redispatches += 1
             wave_times.append(dt)
             rec.extra["t_wave"] = dt
             report.records.append(rec)
-            outs[wi] = out
+            outs[slot.wi] = out
+            slots.remove(slot)
+            if controller is not None:
+                controller.observe(rec, dt,
+                                   straggler=len(slot.attempts) > 1
+                                   or rec.extra.get("straggler_redispatch",
+                                                    False),
+                                   tasks_left=n - state["lo"])
 
-        for wi, (lo, hi) in enumerate(bounds):
-            t_start = time.perf_counter()
-            if wave_delay_hook is not None:
-                time.sleep(wave_delay_hook(wi))
-            chunk = load(lo, hi)
-            handle = self.backend.dispatch(map_fn, chunk, hi - lo)
-            in_flight.append((wi, handle, (lo, hi), t_start))
-            # opportunistic in-order drain of waves that already finished
-            while in_flight and in_flight[0][1].poll():
-                harvest(*in_flight.popleft())
-            # honour the backend's pipeline depth (1 = per-wave barrier)
-            while len(in_flight) >= depth:
-                harvest(*in_flight.popleft())
-        while in_flight:
-            harvest(*in_flight.popleft())
-        report.waves = len(bounds)
+        def sweep() -> bool:
+            """Non-blocking pass: harvest every ready attempt (any wave
+            order, first-ready-wins within a slot), then arm speculative
+            duplicates for outliers. True if anything was harvested."""
+            progressed = False
+            for slot in list(slots):
+                for j, h in enumerate(slot.attempts):
+                    if h.poll():
+                        harvest(slot, j)
+                        progressed = True
+                        break
+            check_stragglers()
+            return progressed
 
-        result = outs
+        def drain_one() -> None:
+            """Make progress when the pipeline is full (or input is
+            exhausted): poll-wait until SOME attempt is ready, escalating
+            an overdue wave to a speculative duplicate instead of ever
+            barriering on it. While a duplicate races its original, BOTH
+            keep being polled (first-ready-wins); only once the duplicate
+            itself is overdue — or no baseline exists yet — does the
+            driver hard-block, so readiness polling that never comes true
+            (a poll-less handle) still terminates."""
+            tick = 1e-4            # adaptive poll tick: tight while the
+            while slots:           # wave is fresh, backing off toward 2ms
+                if sweep():
+                    return
+                oldest = slots[0]
+                thr = threshold()
+                if thr is None:
+                    harvest(oldest, 0)       # no baseline: plain barrier
+                    return
+                now = time.perf_counter()
+                if len(oldest.attempts) == 1:
+                    if now - oldest.t_start > thr:
+                        speculate(oldest)    # start the race, keep polling
+                elif now - oldest.t_attempt[-1] > thr:
+                    # the duplicate is overdue too: polling cannot decide
+                    # this slot — settle on the re-dispatch
+                    harvest(oldest, len(oldest.attempts) - 1)
+                    return
+                # wait the shorter of a poll tick or the time left until
+                # the slot's next escalation point
+                time.sleep(min(tick, 1e-3))
+                tick = min(tick * 2, 2e-3)
+
+        # -- drive -------------------------------------------------------
+        while state["lo"] < n or slots:
+            while state["lo"] < n and len(slots) < depth:
+                dispatch_next()
+                sweep()      # opportunistic harvest keeps the pipe hot
+            if slots and (len(slots) >= depth or state["lo"] >= n):
+                drain_one()
+        report.waves = state["wi"]
+
+        result = [outs[i] for i in range(report.waves)]
         if reduce_fn is not None:
             t = Timer()
-            flat = _concat_waves(outs)
+            flat = _concat_waves(result)
             result = reduce_fn(flat)
             report.t_reduce = t.lap()
         else:
-            result = _concat_waves(outs)
+            result = _concat_waves(result)
         report.t_total = t_all.lap()
         return result, report
 
@@ -181,12 +378,14 @@ def _concat_waves(outs: list) -> Any:
 
 def launch_instances(app_fn: Callable, n: int, item_shape: tuple = (64,),
                      mesh=None, scheduler: str = "array",
-                     wave_size: Optional[int] = None, seed: int = 0,
+                     wave_size: Optional[Union[int, str]] = None,
+                     seed: int = 0,
                      backend: Optional[LaunchBackend] = None,
                      cache: Optional[CompileCache] = None) -> tuple:
     """Launch ``n`` instances of ``app_fn`` (one input item each); returns
     (outputs, MapReduceReport). This is the measured analogue of the
-    paper's 1..16,384 instance sweep."""
+    paper's 1..16,384 instance sweep. ``wave_size="auto"`` engages the
+    measured-telemetry wave controller."""
     rng = np.random.default_rng(seed)
     inputs = rng.standard_normal((n,) + item_shape).astype(np.float32)
     llmr = LLMapReduce(mesh=mesh, scheduler=scheduler, wave_size=wave_size,

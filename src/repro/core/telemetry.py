@@ -7,6 +7,13 @@ completed task (``t_first_result`` — the interactivity metric), and time
 to the last (``t_spawn``). ``fanout`` holds the per-level width of the
 scheduler -> node -> core tree and ``levels()`` maps each level onto its
 measured cost.
+
+Straggler accounting rides in ``extra`` and is surfaced as CSV columns:
+``superseded`` marks an attempt that lost a speculative re-dispatch race
+(its cost stays in the report, its instances are not double-counted) and
+``redispatch`` marks the duplicate attempt that won. Wave autoscaling
+decisions (``repro.core.autoscale.WaveController``) land in
+``extra["autoscale"]`` per wave.
 """
 from __future__ import annotations
 
@@ -26,6 +33,16 @@ class LaunchRecord:
     t_first_result: float = 0.0  # time to first completed task
     fanout: Dict[str, int] = field(default_factory=dict)  # sched/node/core
     extra: dict = field(default_factory=dict)
+
+    @property
+    def superseded(self) -> bool:
+        """This attempt lost a speculative straggler re-dispatch race."""
+        return bool(self.extra.get("superseded_by_redispatch"))
+
+    @property
+    def redispatch(self) -> bool:
+        """This attempt IS the speculative duplicate (the re-dispatch)."""
+        return bool(self.extra.get("straggler_redispatch"))
 
     @property
     def total(self) -> float:
@@ -49,11 +66,12 @@ class LaunchRecord:
         return (f"{self.strategy},{self.n_instances},{self.t_schedule:.4f},"
                 f"{self.t_stage:.4f},{self.t_spawn:.4f},"
                 f"{self.t_first_result:.4f},{self.total:.4f},"
-                f"{self.rate:.2f}")
+                f"{self.rate:.2f},{int(self.superseded)},"
+                f"{int(self.redispatch)}")
 
 
 HEADER = ("strategy,n,t_schedule,t_stage,t_spawn,t_first_result,"
-          "t_total,rate_per_s")
+          "t_total,rate_per_s,superseded,redispatch")
 
 
 class Timer:

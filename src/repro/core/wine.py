@@ -54,21 +54,53 @@ class Instance:
     step_fn: Callable                      # compiled
     state: Any                             # params(+opt) or (params, caches)
     load_report: dict = field(default_factory=dict)
+    raw_fn: Optional[Callable] = None      # uncompiled translation layer
 
     def run(self, inputs: Any) -> Any:
-        out = self.step_fn(self.state, inputs)
-        if isinstance(out, tuple) and len(out) == 2:
-            self.state, result = out
-            return result
-        return out
+        try:
+            out = self.step_fn(self.state, inputs)
+        except TypeError:
+            if self.raw_fn is None:
+                raise
+            # the AOT executable is exact-signature; an input shape the
+            # app's declared specs did not foresee degrades to lazy jit
+            # (per-shape compile on first use), keeping the ABI
+            # workload-agnostic instead of erroring at step time
+            self.step_fn = jax.jit(self.raw_fn)
+            self.load_report["compile_source"] = "jit-fallback"
+            out = self.step_fn(self.state, inputs)
+        # Dispatch on the app's declared mode, NOT on the output's shape:
+        # prefill also returns a len-2 tuple — (logits, caches) — but its
+        # params are read-only; "any 2-tuple is (new_state, result)" would
+        # clobber self.state with logits and hand the caches back as the
+        # "result", corrupting the instance on its first step.
+        if self.app.mode == "prefill":
+            return out
+        new_state, result = out            # train/decode: state advances
+        self.state = new_state
+        return result
 
 
 class WineAdapter:
-    """Uniform ABI over all registered model families."""
+    """Uniform ABI over all registered model families.
 
-    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None):
+    Compilation goes through the shared persistent ``CompileCache`` (via a
+    ``LaunchBackend``), keyed by CONTENT fingerprint — the same cache the
+    launcher and serve engine use, so a Wine app compiled anywhere in the
+    process (or a previous process, via the disk tier) is warm here too.
+    The seed kept a private dict keyed by ``id(self.mesh)``: CPython
+    reuses ids after garbage collection, so a new mesh could silently be
+    served the OLD mesh's executable — the exact unsoundness the content
+    key eliminates."""
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
+                 backend=None, cache=None):
+        from repro.core.backend import ArrayBackend
         self.mesh = mesh
-        self._compile_cache: dict = {}
+        if backend is None:
+            backend = ArrayBackend(mesh=mesh, cache=cache)
+        self.backend = backend
+        self.cache = backend.cache
 
     # -- translation layer ------------------------------------------------
     def _build_train(self, app: WineApp, cfg: ModelConfig):
@@ -102,7 +134,12 @@ class WineAdapter:
 
     # -- public ABI --------------------------------------------------------
     def load(self, app: WineApp, key=None, state: Any = None) -> Instance:
-        """Set up the 'Wine environment': build, compile, stage."""
+        """Set up the 'Wine environment': build, compile, stage.
+
+        Compiles AOT through the shared ``CompileCache`` for the app's
+        declared input signature (``input_specs``), so repeat loads — in
+        this adapter, another adapter, the launcher, or a later process —
+        skip trace+compile entirely."""
         t0 = time.perf_counter()
         cfg = get_config(app.arch, smoke=app.smoke)
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -114,17 +151,23 @@ class WineAdapter:
             state = self._init_state(app, cfg, key)
         t_stage = time.perf_counter() - t0
 
-        cache_key = (app.arch, app.mode, app.shape, app.smoke,
-                     id(self.mesh))
-        compiled = self._compile_cache.get(cache_key)
-        cached = compiled is not None
-        if compiled is None:
-            compiled = jax.jit(fn)
-        self._compile_cache[cache_key] = compiled
+        specs = input_specs(cfg, self._cell(app))
+        try:
+            compiled, source = self.backend.compile(
+                fn, (state, specs),
+                extras=("wine", app.arch, app.mode, app.shape, app.smoke,
+                        app.microbatches))
+        except Exception:
+            # an input signature the AOT path cannot express degrades to
+            # lazy jit (per-shape compile on first run), never to a
+            # launch-path error
+            compiled, source = jax.jit(fn), "jit-fallback"
         t_compile = time.perf_counter() - t0 - t_stage
         return Instance(app, cfg, compiled, state,
                         {"t_stage": t_stage, "t_compile": t_compile,
-                         "compile_cached": cached})
+                         "compile_source": source,
+                         "compile_cached": source in ("memory", "disk")},
+                        raw_fn=fn)
 
     def _init_state(self, app: WineApp, cfg: ModelConfig, key):
         if app.mode == "train":

@@ -1,0 +1,182 @@
+"""WaveController policy contract (grow/shrink/probe/revert from measured
+telemetry) and the LLMapReduce ``wave_size="auto"`` end-to-end path."""
+import numpy as np
+import pytest
+
+from repro.core.autoscale import WaveController
+from repro.core.backend import PipelinedBackend, make_backend
+from repro.core.compile_cache import CompileCache
+from repro.core.llmr import LLMapReduce
+from repro.core.telemetry import LaunchRecord
+
+BIG = 1 << 20
+
+
+def app(x):
+    return (x * 2.0).sum(axis=-1)
+
+
+@pytest.fixture()
+def cache(tmp_path):
+    return CompileCache(cache_dir=str(tmp_path / "aot"))
+
+
+def _rec(n, t_schedule=0.0, t_spawn=0.0, t_first=0.0):
+    rec = LaunchRecord("test", n)
+    rec.t_schedule = t_schedule
+    rec.t_spawn = t_spawn
+    rec.t_first_result = t_first
+    return rec
+
+
+# ----------------------------------------------------------------------
+# controller policy
+# ----------------------------------------------------------------------
+
+def test_small_jobs_run_as_one_wave():
+    c = WaveController(n_tasks=256)
+    assert c.next_wave(256).wave == 256
+
+
+def test_wave_bounds_respected():
+    c = WaveController(n_tasks=BIG, min_wave=64, max_wave=4096)
+    assert 64 <= c.wave <= 4096
+    assert c.next_wave(17).wave == 17          # remaining always bounds
+
+
+def test_grows_while_dispatch_amortization_dominates():
+    c = WaveController(n_tasks=BIG, start_wave=256)
+    assert c.next_wave(BIG).wave == 256
+    # t_schedule is 50% of the wave wall: amortization clearly dominates
+    c.observe(_rec(256, t_schedule=0.05, t_spawn=0.1, t_first=0.09),
+              t_wave=0.1, tasks_left=BIG)
+    assert c.wave == 512 and c._reason.startswith("grow")
+
+
+def test_grow_is_debounced_at_the_boundary():
+    c = WaveController(n_tasks=BIG, start_wave=256)
+    c.next_wave(BIG)
+    # 12% sched frac: above the 10% bar but not clearly — hold once, then
+    # grow when the signal repeats
+    r = _rec(256, t_schedule=0.012, t_spawn=0.1, t_first=0.09)
+    c.observe(r, t_wave=0.1, tasks_left=BIG)
+    assert c.wave == 256 and "debounce" in c._reason
+    c.observe(r, t_wave=0.1, tasks_left=BIG)
+    assert c.wave == 512
+
+
+def test_straggler_shrinks_immediately():
+    c = WaveController(n_tasks=BIG, start_wave=2048)
+    c.next_wave(BIG)
+    lanes_before = c.lanes_cap
+    c.observe(_rec(2048, 0.001, 1.0, 0.9), t_wave=1.0, straggler=True,
+              tasks_left=BIG)
+    assert c.wave == 1024 and "straggler" in c._reason
+    assert c.lanes_cap <= lanes_before
+
+
+def test_drain_shrink_needs_two_consecutive_signals():
+    c = WaveController(n_tasks=BIG, start_wave=2048)
+    c.next_wave(BIG)
+    drained = _rec(2048, 0.001, t_spawn=1.0, t_first=0.1)   # 90% drain
+    c.observe(drained, t_wave=1.0, tasks_left=BIG)
+    assert c.wave == 2048 and "debounce" in c._reason
+    c.observe(drained, t_wave=1.0, tasks_left=BIG)
+    assert c.wave == 1024 and c._reason.startswith("shrink")
+
+
+def test_probe_down_adopts_cheaper_size_and_returns_otherwise():
+    c = WaveController(n_tasks=BIG, start_wave=1024)
+    c.next_wave(BIG)
+    # healthy 1024-wave, plenty of tasks left -> probe one size down
+    c.observe(_rec(1024, 0.001, 1.0, 0.99), t_wave=1.0, tasks_left=BIG)
+    assert c.wave == 512 and c._reason.startswith("probe")
+    # the probe measures clearly cheaper per-instance cost -> adopt
+    c.observe(_rec(512, 0.001, 0.4, 0.39), t_wave=0.4, tasks_left=BIG)
+    assert c.wave == 512 and c._reason.startswith("adopt")
+    # next healthy wave probes further down...
+    c.observe(_rec(512, 0.001, 0.4, 0.39), t_wave=0.4, tasks_left=BIG)
+    assert c.wave == 256 and c._reason.startswith("probe")
+    # ...which is worse per instance -> return and commit
+    c.observe(_rec(256, 0.001, 0.3, 0.29), t_wave=0.3, tasks_left=BIG)
+    assert c.wave == 512 and c.committed and c._reason.startswith("return")
+
+
+def test_probe_gated_by_remaining_tasks():
+    c = WaveController(n_tasks=BIG, start_wave=1024)
+    c.next_wave(BIG)
+    # healthy wave but almost no tasks left: probing cannot pay off
+    c.observe(_rec(1024, 0.001, 1.0, 0.99), t_wave=1.0, tasks_left=1024)
+    assert c.wave == 1024 and not c._reason.startswith("probe")
+
+
+def test_cost_regression_reverts_and_caps_growth():
+    c = WaveController(n_tasks=BIG, start_wave=512)
+    c.next_wave(BIG)
+    # strong amortization signal: grow to 1024
+    c.observe(_rec(512, t_schedule=0.3, t_spawn=1.0, t_first=0.9),
+              t_wave=1.0, tasks_left=BIG)
+    assert c.wave == 1024
+    # 1024 costs 3x more per instance than 512 did: revert + ceiling
+    c.observe(_rec(1024, 0.01, 6.0, 5.9), t_wave=6.0, tasks_left=BIG)
+    assert c.wave == 512 and c.ceiling == 1024
+    assert c._reason.startswith("revert")
+    # renewed grow pressure cannot climb past the measured-bad size
+    c.observe(_rec(512, t_schedule=0.3, t_spawn=1.0, t_first=0.9),
+              t_wave=1.0, tasks_left=BIG)
+    assert c.wave == 512 and "ceiling" in c._reason
+
+
+def test_lanes_flat_on_single_device_hierarchical_on_many():
+    c1 = WaveController(n_tasks=4096, devices=1, start_wave=1024)
+    assert c1.next_wave(4096).inner_lanes == 1
+    c4 = WaveController(n_tasks=4096, devices=4, start_wave=1024)
+    d = c4.next_wave(4096)
+    assert d.inner_lanes > 1
+    assert d.wave % d.inner_lanes == 0             # exact reshape
+    assert d.wave // d.inner_lanes >= 4            # node >= devices
+
+
+def test_tail_waves_do_not_steer_the_ladder():
+    c = WaveController(n_tasks=BIG, start_wave=1024)
+    c.next_wave(BIG)
+    # an absorbed/tail wave (size != nominal) must not enter the cost map
+    c.observe(_rec(777, 0.001, 9.9, 9.8), t_wave=9.9, tasks_left=BIG)
+    assert 777 not in c.cost and c._reason == "hold:tail"
+
+
+# ----------------------------------------------------------------------
+# end-to-end through LLMapReduce
+# ----------------------------------------------------------------------
+
+def test_auto_wave_size_end_to_end(cache):
+    inputs = np.random.default_rng(0).standard_normal((600, 8)).astype(
+        np.float32)
+    llmr = LLMapReduce(wave_size="auto",
+                       backend=PipelinedBackend(cache=cache))
+    out, report = llmr.map_reduce(app, inputs)
+    np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 2.0,
+                               rtol=1e-5, atol=1e-5)
+    assert report.n_instances == 600
+    assert report.waves >= 1
+    # one decision per wave, mirrored into the records' extra
+    assert len(report.autoscale) == report.waves
+    originals = [r for r in report.records
+                 if not r.superseded and not r.redispatch]
+    assert all("autoscale" in r.extra for r in originals)
+    assert sum(d.wave for d in report.autoscale) == 600
+
+
+def test_auto_wave_size_with_serial_backend(cache):
+    # serial backends ignore lane overrides but still honour the sizing
+    inputs = np.ones((16, 4), np.float32)
+    out, report = LLMapReduce(wave_size="auto",
+                              scheduler="serial").map_reduce(app, inputs)
+    assert report.n_instances == 16
+    assert len(out) == 16
+
+
+def test_make_backend_normalizes_auto_inner_lanes(cache):
+    be = make_backend("pipelined", cache=cache, inner_lanes="auto")
+    assert be.inner_lanes is None          # per-wave override drives it
+    assert be.supports_lane_override

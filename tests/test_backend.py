@@ -107,11 +107,59 @@ def test_donation_disabled_on_cpu(cache):
 
 
 def test_inner_lanes_fall_back_when_indivisible(cache):
+    """Regression: the fallback used to be silent — the user's fan-out
+    config was dropped with no signal. It must now land in the record's
+    extra and warn once (and only once) per backend."""
+    import warnings
     be = ArrayBackend(cache=cache, inner_lanes=5)
     inputs = np.ones((12, 4), np.float32)      # 12 % 5 != 0 -> flat vmap
-    out, rec = be.launch(app, inputs, 12)
+    with pytest.warns(RuntimeWarning, match="inner_lanes=5"):
+        out, rec = be.launch(app, inputs, 12)
     assert rec.fanout == {"sched": 1, "node": 12, "core": 1}
+    assert rec.extra["inner_lanes_fallback"] == {
+        "requested": 5, "wave": 12, "used": (12, 1)}
     np.testing.assert_allclose(np.asarray(out), np.full(12, 12.0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # second launch: no warning
+        _, rec2 = be.launch(app, inputs, 12)
+    assert rec2.extra["inner_lanes_fallback"]["requested"] == 5
+
+
+def test_dispatch_accepts_per_wave_inner_lanes_override(cache):
+    """The autoscaling controller re-plans the node/core fan-out per
+    wave through dispatch(..., inner_lanes=...)."""
+    be = ArrayBackend(cache=cache)
+    out, rec = be.dispatch(app, np.ones((16, 4), np.float32), 16,
+                           inner_lanes=4).result()
+    assert rec.fanout == {"sched": 1, "node": 4, "core": 4}
+    np.testing.assert_allclose(np.asarray(out), np.full(16, 12.0))
+
+
+def test_serial_attributes_per_task_submit_to_t_schedule():
+    """Regression: SerialBackend never set t_schedule, so the serial
+    baseline's per-task scheduler cost — exactly the cost the paper's
+    array launch eliminates — showed as 0.0 in the fig6 CSV and in
+    levels()['sched']."""
+    be = SerialBackend()
+    inputs = np.ones((6, 4), np.float32)
+    _, rec = be.launch(app, inputs, 6)
+    assert rec.t_schedule > 0.0
+    assert rec.levels()["sched"] == rec.t_schedule
+    # sched + node + core partition the measured wall clock: nothing of
+    # the per-task submit cost hides inside t_spawn any more
+    assert rec.total == pytest.approx(
+        rec.t_schedule + rec.t_stage + rec.t_spawn)
+    assert rec.t_first_result > 0.0
+    assert rec.t_first_result <= rec.t_spawn + 1e-9
+    # per-instance trace+compile dwarfs the actual execution — the
+    # whole point of the serial-VM baseline
+    assert rec.t_schedule > rec.t_spawn
+
+
+def test_serial_overhead_counts_as_scheduler_cost():
+    be = SerialBackend(per_task_overhead_s=0.01)
+    _, rec = be.launch(app, np.ones((3, 4), np.float32), 3)
+    assert rec.t_schedule >= 3 * 0.01
 
 
 def test_serve_and_launch_share_compile_cache(cache):

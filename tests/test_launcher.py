@@ -305,6 +305,44 @@ def test_straggler_accounting_keeps_both_attempts():
     assert superseded[0].extra["t_wave"] > reruns[0].extra["t_wave"]
 
 
+def test_pipelined_straggler_redispatch_without_barrier(cache):
+    """Tentpole regression: with depth>=2 and one injected slow wave, the
+    driver must (a) keep harvesting other waves while a speculative
+    duplicate races the straggler — no harvest barrier, (b) count the
+    work once while keeping both attempts' cost, and (c) produce
+    bit-identical results to the clean run."""
+    inputs = np.arange(64 * 4, dtype=np.float32).reshape(64, 4)
+
+    def mk():
+        return LLMapReduce(wave_size=8, straggler_factor=3.0,
+                           min_straggler_s=0.05,
+                           backend=PipelinedBackend(cache=cache, depth=2))
+
+    out_ref, _ = mk().map_reduce(app, inputs)
+    delay = 1.5
+    out, report = mk().map_reduce(
+        app, inputs, wave_delay_hook=lambda w: delay if w == 3 else 0.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
+    assert report.speculative_redispatches >= 1
+    assert report.waves == 8
+    # work counted ONCE; every attempt's cost retained
+    assert report.n_instances == 64
+    assert report.n_attempts == 64 + 8 * report.speculative_redispatches
+    # barrier-free: the run never paid the injected delay (the old
+    # synchronous re-dispatch inside harvest() cost the full delay)
+    assert report.t_total < delay, report.t_total
+    # later waves were harvested while the duplicate was in flight
+    order = [r.extra["wave"] for r in report.records if not r.superseded]
+    assert order.index(3) > order.index(4)
+    superseded = [r for r in report.records if r.superseded]
+    winners = [r for r in report.records if r.redispatch]
+    assert any(r.extra["wave"] == 3 for r in superseded)
+    assert any(r.extra["wave"] == 3 for r in winners)
+    # the loser's record keeps its (partial) wall clock, never blocking
+    # the driver for it
+    assert all(r.extra["t_wave"] > 0 for r in superseded)
+
+
 def test_launch_rate_array_beats_serial():
     """The paper's headline property at CPU scale: array launch must beat
     serial-VM launch by a wide margin."""

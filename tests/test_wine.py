@@ -1,0 +1,115 @@
+"""Wine ABI regressions: ``Instance.run`` dispatches on the app's declared
+mode (a prefill's ``(logits, caches)`` 2-tuple must not be mistaken for a
+``(new_state, result)`` state advance), and ``WineAdapter`` compiles
+through the shared content-keyed persistent ``CompileCache`` instead of a
+private dict keyed by ``id(self.mesh)``."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import ArrayBackend
+from repro.core.compile_cache import CompileCache
+from repro.core.wine import WineAdapter, WineApp
+
+
+@pytest.fixture()
+def cache(tmp_path):
+    return CompileCache(cache_dir=str(tmp_path / "aot"))
+
+
+def _batch(adapter, app):
+    specs = adapter.input_specs(app)
+    return {k: jnp.ones(v.shape, v.dtype) if v.dtype == jnp.int32
+            else jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+
+
+def test_prefill_instance_runs_twice_without_clobbering_state(cache):
+    """Regression: the seed treated ANY len-2 output as (new_state,
+    result), so a prefill instance overwrote its params with logits on
+    the first step and returned the caches as the 'result' — a second
+    run was garbage. Dispatch must go by app.mode."""
+    adapter = WineAdapter(backend=ArrayBackend(cache=cache))
+    app = WineApp(arch="qwen3-14b", mode="prefill", shape="prefill_32k",
+                  smoke=True)
+    inst = adapter.load(app)
+    params_before = inst.state
+    batch = _batch(adapter, app)
+    out1 = inst.run(batch)
+    # prefill returns (last-token logits, filled caches); params are
+    # read-only and must remain the instance's state
+    assert isinstance(out1, tuple) and len(out1) == 2
+    assert inst.state is params_before
+    out2 = inst.run(batch)                 # second run: same program,
+    np.testing.assert_array_equal(         # same params, same logits
+        np.asarray(out1[0]), np.asarray(out2[0]))
+    assert inst.state is params_before
+
+
+def test_train_instance_still_advances_state(cache):
+    adapter = WineAdapter(backend=ArrayBackend(cache=cache))
+    app = WineApp(arch="mamba2-1.3b", mode="train", smoke=True)
+    inst = adapter.load(app)
+    state_before = inst.state
+    metrics = inst.run(_batch(adapter, app))
+    assert jnp.isfinite(metrics["loss"])
+    assert inst.state is not state_before          # train state advanced
+
+
+def test_decode_instance_advances_caches(cache):
+    adapter = WineAdapter(backend=ArrayBackend(cache=cache))
+    app = WineApp(arch="qwen3-14b", mode="decode", shape="decode_32k",
+                  smoke=True)
+    inst = adapter.load(app)
+    batch = _batch(adapter, app)
+    logits = inst.run(batch)
+    assert np.asarray(logits).shape[0] == batch["tokens"].shape[0]
+    params, caches = inst.state                    # still (params, caches)
+    assert caches is not None
+
+
+def test_run_falls_back_to_lazy_jit_on_unforeseen_shapes(cache):
+    """The AOT executable is exact-signature; inputs off the declared
+    specs (e.g. a final partial batch) must degrade to lazy jit, not
+    error — the ABI stays workload-agnostic."""
+    adapter = WineAdapter(backend=ArrayBackend(cache=cache))
+    app = WineApp(arch="mamba2-1.3b", mode="train", smoke=True)
+    inst = adapter.load(app)
+    specs = adapter.input_specs(app)
+    half = {k: (jnp.ones((2,) + v.shape[1:], v.dtype)
+                if v.dtype == jnp.int32
+                else jnp.zeros((2,) + v.shape[1:], v.dtype))
+            for k, v in specs.items()}          # half the declared batch
+    metrics = inst.run(half)
+    assert jnp.isfinite(metrics["loss"])
+    assert inst.load_report["compile_source"] == "jit-fallback"
+
+
+def test_wine_compiles_through_shared_cache(cache):
+    """The compile must hit the shared CompileCache: warm for the same
+    adapter AND for a different adapter over the same cache (the seed's
+    per-adapter dict keyed by id(mesh) could never share either way)."""
+    app = WineApp(arch="qwen3-14b", mode="train", smoke=True)
+    a1 = WineAdapter(backend=ArrayBackend(cache=cache))
+    inst1 = a1.load(app)
+    assert inst1.load_report["compile_source"] == "compiled"
+    assert not inst1.load_report["compile_cached"]
+    inst2 = a1.load(app, state=inst1.state)
+    assert inst2.load_report["compile_source"] == "memory"
+    assert inst2.load_report["compile_cached"]
+    a2 = WineAdapter(backend=ArrayBackend(cache=cache))
+    inst3 = a2.load(app, state=inst1.state)
+    assert inst3.load_report["compile_source"] == "memory"
+
+
+def test_wine_cache_persists_across_processes(tmp_path):
+    """A fresh CompileCache over the same dir models a new process: the
+    Wine app's executable must come back from the disk tier, skipping
+    trace+compile entirely (the paper's pre-staged Wine prefix)."""
+    d = str(tmp_path / "aot")
+    app = WineApp(arch="qwen3-14b", mode="train", smoke=True)
+    a1 = WineAdapter(backend=ArrayBackend(cache=CompileCache(cache_dir=d)))
+    inst1 = a1.load(app)
+    assert inst1.load_report["compile_source"] == "compiled"
+    a2 = WineAdapter(backend=ArrayBackend(cache=CompileCache(cache_dir=d)))
+    inst2 = a2.load(app, state=inst1.state)
+    assert inst2.load_report["compile_source"] == "disk"
