@@ -319,6 +319,118 @@ def bench_fig_autoscale():
     return rows
 
 
+def bench_fig_serve():
+    """fig_serve: the paged serving subsystem.
+
+    (a) fixed-partition vs paged pool on the SAME request trace — wall
+        clock plus a token-equality check (the paged gather/scatter path
+        must be bit-compatible with the dense rings), and a tight-pool
+        run (pool = a QUARTER of the static partition) that still
+        completes the trace by preempting batch-class work;
+    (b) one-slot admit loop vs batched multi-slot prefill — mean TTFT
+        over a request burst (one padded executable vs k dispatches);
+    (c) mixed-priority split under an oversubscribed pool — interactive
+        p50 TTFT must not exceed batch p50 TTFT.
+    """
+    from repro.configs import get_config
+    from repro.core.backend import ArrayBackend
+    from repro.core.compile_cache import CompileCache
+    from repro.models.lm import lm_init
+    from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+
+    cache = CompileCache(cache_dir=tempfile.mkdtemp(prefix="repro-aot-"))
+    backend = ArrayBackend(cache=cache)
+    cfg = get_config("qwen3-14b", smoke=True)
+    params = jax.block_until_ready(lm_init(jax.random.PRNGKey(0), cfg))
+    slots, page, pps = 4, 8, 8            # vcap == fixed capacity == 64
+    R = 12 if _QUICK else 24
+    gen = 8 if _QUICK else 16
+    reps = 3 if _QUICK else 5
+
+    def trace(batch_every=0):
+        rng = np.random.default_rng(7)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            size=int(rng.choice([8, 12, 16]))),
+                        max_new=gen,
+                        priority=("batch" if batch_every
+                                  and i % batch_every == 0 else "interactive"))
+                for i in range(R)]
+
+    def fixed():
+        return ServeEngine(cfg, params, slots=slots, capacity=page * pps,
+                           backend=backend)
+
+    def paged(batched=True, pool_pages=None):
+        return PagedServeEngine(cfg, params, slots=slots, page_size=page,
+                                pages_per_slot=pps, pool_pages=pool_pages,
+                                backend=backend, batched_prefill=batched)
+
+    rows = []
+    # -- (a) fixed vs paged: wall clock + token equality ------------------
+    for mk in (fixed, paged):             # warm every executable shape
+        mk().run(trace(), max_steps=3000)
+    walls = {"fixed": [], "paged": []}
+    outs = {}
+    for _ in range(reps):
+        for name, mk in (("fixed", fixed), ("paged", paged)):
+            t = trace()
+            st = mk().run(t, max_steps=3000)
+            walls[name].append(st["wall_s"])
+            outs[name] = [r.out for r in t]
+    identical = outs["fixed"] == outs["paged"]
+    for name in walls:
+        w = float(np.median(walls[name]))
+        rows.append((f"fig_serve_{name}_wall", w * 1e6,
+                     f"total_s={w:.3f} tok={R * gen}"))
+    rows.append(("fig_serve_paged_identical", float(identical),
+                 f"bit_identical_tokens={identical}"))
+    # tight pool: a QUARTER of the static partition's pages, batch filler
+    # preempted under pressure — the trace must still complete
+    t = trace(batch_every=2)
+    st = paged(pool_pages=slots * pps // 4).run(t, max_steps=6000)
+    rows.append(("fig_serve_paged_tight_pool", st["wall_s"] * 1e6,
+                 f"pages={slots * pps // 4}vs{slots * pps} "
+                 f"done={all(r.done for r in t)} "
+                 f"preemptions={st['preemptions']} "
+                 f"pool_exhausted={st['pool_exhausted']}"))
+
+    # -- (b) one-slot vs batched multi-slot prefill: mean TTFT ------------
+    for batched in (False, True):         # warm the one-slot shapes too
+        paged(batched=batched).run(trace(), max_steps=3000)
+    ttft = {"oneslot": [], "batched": []}
+    for _ in range(reps):
+        for name, batched in (("oneslot", False), ("batched", True)):
+            eng = paged(batched=batched)
+            eng.run(trace(), max_steps=3000)
+            ttft[name].append(float(np.mean([r.ttft_s for r in eng.records])))
+    for name in ttft:
+        m = float(np.median(ttft[name]))
+        rows.append((f"fig_serve_ttft_{name}", m * 1e6, f"mean_ttft_s={m:.4f}"))
+    speedup = float(np.median([a / b for a, b in
+                               zip(ttft["oneslot"], ttft["batched"])]))
+    rows.append(("fig_serve_batched_prefill_speedup", speedup,
+                 f"oneslot/batched={speedup:.3f}x (median of {reps} "
+                 f"paired bursts of {R})"))
+
+    # -- (c) mixed-priority latency split ---------------------------------
+    t = trace(batch_every=2)              # half the trace is batch-class
+    eng = paged(pool_pages=slots * pps // 4)
+    eng.run(t, max_steps=6000)
+    cls = eng.stats["classes"]
+    p50_i = cls["interactive"]["p50_ttft_s"]
+    p50_b = cls["batch"]["p50_ttft_s"]
+    rows.append(("fig_serve_p50_ttft_interactive", p50_i * 1e6,
+                 f"n={cls['interactive']['n']}"))
+    rows.append(("fig_serve_p50_ttft_batch", p50_b * 1e6,
+                 f"n={cls['batch']['n']} "
+                 f"preemptions={eng.stats['preemptions']}"))
+    rows.append(("fig_serve_priority_split", p50_b / max(p50_i, 1e-9),
+                 f"batch/interactive={p50_b / max(p50_i, 1e-9):.2f}x "
+                 f"(>=1 means interactive served first)"))
+    return rows
+
+
 _CACHE_PROBE = """
 import os, numpy as np
 import jax, jax.numpy as jnp
@@ -439,6 +551,7 @@ BENCHES = {
     "fig7": bench_fig7_launch_rate,
     "fig7_backends": bench_fig7_backend_rate,
     "fig_autoscale": bench_fig_autoscale,
+    "fig_serve": bench_fig_serve,
     "cache": bench_persistent_compile_cache,
     "wine": bench_wine_env_setup,
     "train": bench_train_steps,

@@ -38,6 +38,22 @@ import jax
 import numpy as np
 
 _DEFAULT_DIR_ENV = "REPRO_COMPILE_CACHE_DIR"
+_MAX_BYTES_ENV = "REPRO_COMPILE_CACHE_MAX_BYTES"
+
+_VERSION_TAG: Optional[str] = None
+
+
+def _version_tag() -> str:
+    """Short digest of the jax version, embedded in every spill's filename.
+    Executables serialized by one jax are not trusted by another: a
+    different-version file is dead weight that can never hit (the
+    fingerprint already folds in ``jax.__version__``), so pruning deletes
+    it on sight instead of letting the dir grow without bound."""
+    global _VERSION_TAG
+    if _VERSION_TAG is None:
+        _VERSION_TAG = hashlib.sha256(
+            ("jax:" + jax.__version__).encode()).hexdigest()[:8]
+    return _VERSION_TAG
 
 
 # ----------------------------------------------------------------------
@@ -223,34 +239,96 @@ class CompileCache:
 
     Disk persistence is best-effort: any serialization failure degrades to
     memory-only caching, never to an error on the launch path.
+
+    The disk tier is bounded: ``max_bytes`` (default from
+    ``REPRO_COMPILE_CACHE_MAX_BYTES``; None = unbounded) caps the dir with
+    LRU-by-bytes eviction — a disk hit refreshes the entry's recency, a
+    spill prunes the least-recently-used entries over budget — and spills
+    stamped with a different jax version are deleted on sight (their keys
+    can never hit; see ``_version_tag``). Both are reported in ``stats``
+    (``evictions`` / ``version_drops``).
     """
 
     def __init__(self, cache_dir: Optional[str] = None,
-                 persistent: bool = True):
+                 persistent: bool = True,
+                 max_bytes: Optional[int] = None):
         if cache_dir is None:
             cache_dir = os.environ.get(
                 _DEFAULT_DIR_ENV,
                 os.path.join(os.path.expanduser("~"), ".cache", "repro-aot"))
         self.cache_dir = cache_dir
         self.persistent = persistent
+        if max_bytes is None:
+            env = os.environ.get(_MAX_BYTES_ENV)
+            max_bytes = int(env) if env else None
+        self.max_bytes = max_bytes
         self._mem: dict = {}
         self._lock = threading.Lock()
+        self._version_pruned = False
         self.stats = {"mem_hits": 0, "disk_hits": 0, "misses": 0,
-                      "spills": 0, "spill_errors": 0}
+                      "spills": 0, "spill_errors": 0,
+                      "evictions": 0, "version_drops": 0}
 
     # -- tiers ------------------------------------------------------------
     def _path(self, key: str) -> str:
-        return os.path.join(self.cache_dir, key + ".aotx")
+        return os.path.join(self.cache_dir,
+                            f"{key}.{_version_tag()}.aotx")
+
+    def _prune_stale_versions(self) -> None:
+        """Drop spills stamped with a different jax version (once per
+        process per cache): they can never hit — the content fingerprint
+        folds the version in — so they are pure dir growth."""
+        if self._version_pruned:
+            return
+        self._version_pruned = True
+        suffix = f".{_version_tag()}.aotx"
+        try:
+            for name in os.listdir(self.cache_dir):
+                if name.endswith(".aotx") and not name.endswith(suffix):
+                    os.remove(os.path.join(self.cache_dir, name))
+                    self.stats["version_drops"] += 1
+        except OSError:
+            pass
+
+    def _prune_lru(self) -> None:
+        """LRU-by-bytes: evict least-recently-USED spills (disk hits
+        refresh a file's mtime) until the dir fits ``max_bytes``."""
+        if self.max_bytes is None:
+            return
+        try:
+            entries = []
+            for name in os.listdir(self.cache_dir):
+                if not name.endswith(".aotx"):
+                    continue
+                p = os.path.join(self.cache_dir, name)
+                st = os.stat(p)
+                entries.append((st.st_mtime_ns, st.st_size, p))
+            total = sum(sz for _, sz, _ in entries)
+            for _, sz, p in sorted(entries):
+                if total <= self.max_bytes:
+                    break
+                os.remove(p)
+                total -= sz
+                self.stats["evictions"] += 1
+        except OSError:
+            pass
 
     def _disk_get(self, key: str):
         if not self.persistent:
             return None
         try:
-            with open(self._path(key), "rb") as f:
+            self._prune_stale_versions()
+            path = self._path(key)
+            with open(path, "rb") as f:
                 payload = pickle.load(f)
             from jax.experimental.serialize_executable import (
                 deserialize_and_load)
-            return deserialize_and_load(*payload)
+            compiled = deserialize_and_load(*payload)
+            try:
+                os.utime(path)               # refresh LRU recency
+            except OSError:
+                pass                         # read-only dir: still a hit
+            return compiled
         except Exception:
             return None
 
@@ -261,11 +339,13 @@ class CompileCache:
             from jax.experimental.serialize_executable import serialize
             payload = serialize(compiled)
             os.makedirs(self.cache_dir, exist_ok=True)
+            self._prune_stale_versions()
             fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
             with os.fdopen(fd, "wb") as f:
                 pickle.dump(payload, f)
             os.replace(tmp, self._path(key))     # atomic publish
             self.stats["spills"] += 1
+            self._prune_lru()
         except Exception:
             self.stats["spill_errors"] += 1
 

@@ -6,20 +6,32 @@ Public surface (all pure functions — the Wine ABI wraps exactly these):
   lm_logits(params, hidden, cfg)                     -> logits
   lm_loss(params, batch, cfg, remat=True)            -> (loss, metrics)
   prefill(params, inputs, cfg, capacity)             -> (last_logits, caches)
+  prefill_batched(params, inputs, cfg, lengths, ...) -> (last_logits, caches)
   decode_step(params, caches, tokens, pos, cfg)      -> (logits, caches)
   cache_init(cfg, batch, capacity)                   -> caches
+
+Paged KV (the shared-pool serving path — ``repro.serve``):
+  paged_cache_init(cfg, slots, n_pages, page_size)   -> pool caches
+  paged_gather(pool, tables)                         -> dense per-slot caches
+  paged_scatter(pool, dense, tables, claim, ...)     -> pool caches
+  paged_clear(pool, page_ids)                        -> pool caches
+  paged_prefill(params, pool, tables, tokens, ...)   -> (logits, pool)
+  paged_decode_step(params, pool, tables, t, p, cfg) -> (logits, pool)
   count_params(cfg, active_only=False)               -> int
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.models.attention import attn_cache_init
 from repro.models.blocks import (block_cache_init, group_apply,
                                  group_cache_init, group_init)
+from repro.models.ssm import ssm_cache_init
 from repro.models.layers import (embed_init, embed_logits, embed_lookup,
                                  norm_apply, norm_init, normal_init, softcap)
 from repro.models.spec import ModelConfig
@@ -212,6 +224,275 @@ def decode_step(params: dict, caches: list, tokens: jax.Array,
                                  enc_out=enc_out)
     logits = lm_logits(params, h, cfg)
     return logits, new_caches
+
+
+def _map_attn_subs(caches: list, attn_fn, ssm_fn=None):
+    """Walk a cache pytree (list of group trees of block dicts) applying
+    ``attn_fn`` to every attention sub-cache and ``ssm_fn`` (identity when
+    None) to every SSM sub-cache. Preserves structure."""
+    out = []
+    for gtree in caches:
+        ng = {}
+        for bi, btree in gtree.items():
+            nb = {}
+            for kind, sub in btree.items():
+                if kind == "attn":
+                    nb[kind] = attn_fn(sub)
+                else:
+                    nb[kind] = ssm_fn(sub) if ssm_fn is not None else sub
+            ng[bi] = nb
+        out.append(ng)
+    return out
+
+
+def _zip_attn_subs(pool: list, dense: list, attn_fn, ssm_fn):
+    """Two-tree variant of ``_map_attn_subs`` (pool and dense in lockstep)."""
+    out = []
+    for gpool, gdense in zip(pool, dense):
+        ng = {}
+        for bi in gpool:
+            nb = {}
+            for kind in gpool[bi]:
+                fn = attn_fn if kind == "attn" else ssm_fn
+                nb[kind] = fn(gpool[bi][kind], gdense[bi][kind])
+            ng[bi] = nb
+        out.append(ng)
+    return out
+
+
+def prefill_batched(params: dict, inputs: dict, cfg: ModelConfig,
+                    lengths: jax.Array,
+                    enc_out: Optional[jax.Array] = None,
+                    capacity: Optional[int] = None):
+    """Multi-slot prefill of right-padded prompts in ONE executable.
+
+    ``inputs["tokens"]`` is (B, S) with row b's real prompt in columns
+    ``[0, lengths[b])`` and arbitrary padding after. Causality means pad
+    columns (later positions) never influence real tokens, so each row's
+    last-real-token logits equal the unpadded single-prompt prefill.
+    Returns (per-row last-REAL-token logits (B, 1, V), caches with every
+    pad entry neutralized — ``pos`` forced to -1 — so a later decode can
+    never attend padding).
+
+    NOTE: only valid for attention-cached models. SSM/conv state is a
+    recurrence over ALL processed tokens including pads; callers batching
+    prompts for an SSM-bearing config must group by exact length (no pads).
+    """
+    x, positions = _embed_inputs(params, inputs, cfg)
+    x = constrain(x, "batch", "seq", "act_d")
+    B, S = x.shape[:2]
+    capacity = max(capacity or S, S)
+    caches = []
+    for gi, g in enumerate(cfg.groups):
+        c = group_cache_init(cfg, g, B, capacity)
+        x, nc, _ = group_apply(params["groups"][gi], x, g, cfg, positions,
+                               caches=c, enc_out=enc_out)
+        caches.append(nc)
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, S - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)      # (B,1,D)
+    logits = lm_logits(params, last, cfg)
+    lim = lengths.astype(jnp.int32)[None, :, None]                 # (1,B,1)
+
+    def neutralize(sub):
+        sub = dict(sub)
+        p = sub["pos"]
+        sub["pos"] = jnp.where((p >= 0) & (p < lim), p, -1)
+        return sub
+
+    return logits, _map_attn_subs(caches, neutralize)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: one shared page pool, per-slot page tables
+# ---------------------------------------------------------------------------
+#
+# Dense serving statically partitions KV capacity: ``cache_init(cfg, slots,
+# capacity)`` gives every slot its own ring whether it holds an 8-token or
+# an 800-token request. The paged layout pools that memory: attention cache
+# leaves carry a PAGE axis of ``n_pages`` fixed-size pages — (repeats,
+# n_pages, page_size, ...) — and each slot owns an ordered page list (its
+# page table). Slot b's virtual cache row v lives in page
+# ``tables[b, v // page_size]`` at offset ``v % page_size``; -1 table
+# entries read as empty (pos = -1), so unallocated tail pages cost nothing
+# but the gather. SSM/conv state is O(1) per slot and stays slot-dense.
+#
+# All shapes are static: ``tables`` is a (slots, pages_per_slot) int32
+# ARGUMENT of the compiled program, so growing/freeing/stealing pages never
+# recompiles — exactly how the launcher keeps one executable per wave
+# shape. Gather/scatter are plain XLA gathers (a Pallas paged-attention
+# kernel that skips the materialized dense view is the TPU follow-on).
+
+def paged_cache_init(cfg: ModelConfig, slots: int, n_pages: int,
+                     page_size: int) -> list:
+    """Pool caches: attention leaves paged over ``n_pages`` x ``page_size``
+    (windowed layers use full pages too — windows are enforced by the pos
+    mask, not by ring truncation); SSM state stays per-slot dense."""
+    caches = []
+    for g in cfg.groups:
+        per_block = {}
+        for i, b in enumerate(g.pattern):
+            c: dict = {}
+            if b.attn is not None:
+                spec = (b.attn if b.attn.window is None
+                        else dataclasses.replace(b.attn, window=None))
+                c["attn"] = attn_cache_init(n_pages, page_size, spec)
+            if b.ssm is not None:
+                c["ssm"] = ssm_cache_init(slots, cfg.d_model, b.ssm)
+            per_block[str(i)] = c
+        caches.append(jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (g.repeats,) + a.shape).copy()
+            if g.repeats > 1 else a[None], per_block))
+    return caches
+
+
+def pool_page_size(pool: list) -> Optional[int]:
+    """Page size of a paged cache pytree (None when the model has no
+    attention caches to page — pure-SSM state is slot-dense)."""
+    for gtree in pool:
+        for btree in gtree.values():
+            sub = btree.get("attn")
+            if sub:
+                return sub["pos"].shape[-1]
+    return None
+
+
+def _rows_at(leaf: jax.Array, idx: jax.Array) -> jax.Array:
+    """leaf: (R, B, C, ...), idx: (B, W) -> rows (R, B, W, ...)."""
+    return jax.vmap(lambda lf, ii: jnp.take(lf, ii, axis=1),
+                    in_axes=(1, 0), out_axes=1)(leaf, idx)
+
+
+def paged_gather(pool: list, tables: jax.Array) -> list:
+    """Materialize the dense per-slot view of a paged pool.
+
+    tables: (B, pages_per_slot) int32 page ids, -1 = unallocated. Returns
+    caches shaped exactly like ``cache_init(cfg, B, vcap)`` output with
+    ``vcap = pages_per_slot * page_size`` — ``decode_step`` runs on it
+    unchanged, which is what makes the paged engine bit-compatible with
+    the fixed-partition one."""
+    clamped = jnp.maximum(tables, 0)
+    B, n_per = tables.shape
+
+    def attn_fn(sub):
+        ps = sub["pos"].shape[-1]
+        valid = jnp.repeat(tables >= 0, ps, axis=1)            # (B, vcap)
+        out = {}
+        for k, leaf in sub.items():
+            g = jnp.take(leaf, clamped, axis=1)        # (R, B, n_per, ps, …)
+            g = g.reshape(g.shape[0], B, n_per * ps, *g.shape[4:])
+            if k == "pos":
+                g = jnp.where(valid[None], g, -1)
+            out[k] = g
+        return out
+
+    return _map_attn_subs(pool, attn_fn)
+
+
+def paged_scatter(pool: list, dense: list, tables: jax.Array,
+                  claim: jax.Array,
+                  slot_ids: Optional[jax.Array] = None,
+                  live: Optional[jax.Array] = None) -> list:
+    """Commit dense cache rows holding absolute positions ``claim`` (B, W)
+    back into the pool pages mapped by ``tables`` (B, pages_per_slot).
+
+    A row is written only when the dense cache actually HOLDS its claimed
+    position (``dense pos == claim`` — ring wrap and pad neutralization
+    both make this false) and the target page is allocated; everything
+    else lands on an out-of-range page index and is dropped by the
+    scatter. SSM state is slot-dense, not paged: it is written at
+    ``slot_ids`` (B,) rows of the pool's slot axis (out-of-range ids drop,
+    which is how dummy batch-pad rows are discarded), or replaces the pool
+    state wholesale when ``slot_ids`` is None (the decode path, where the
+    dense batch IS the slot axis) — gated per slot by ``live`` (B,) bool:
+    a stalled slot keeps its OLD state, so its retried step is truly
+    identical (the recurrence must not absorb the same token twice)."""
+
+    def attn_fn(pool_sub, dense_sub):
+        ps = pool_sub["pos"].shape[-1]
+        n_pages = pool_sub["pos"].shape[1]
+        vcap = tables.shape[1] * ps
+        v = jnp.where(claim >= 0, claim % vcap, 0)
+        page = jnp.take_along_axis(tables, v // ps, axis=1)       # (B, W)
+        off = v % ps
+        cap_leaf = dense_sub["pos"].shape[2]
+        j = jnp.where(claim >= 0, claim % cap_leaf, 0)
+        held = _rows_at(dense_sub["pos"], j)[0]                   # (B, W)
+        ok = (claim >= 0) & (held == claim) & (page >= 0)
+        tgt = jnp.where(ok, page, n_pages)                        # OOB drops
+        out = {}
+        for k, pl in pool_sub.items():
+            rows = _rows_at(dense_sub[k], j)
+            out[k] = pl.at[:, tgt, off].set(rows.astype(pl.dtype),
+                                            mode="drop")
+        return out
+
+    def ssm_fn(pool_sub, dense_sub):
+        if slot_ids is None:
+            if live is None:
+                return dense_sub
+            return {k: jnp.where(
+                live.reshape((1, -1) + (1,) * (pool_sub[k].ndim - 2)),
+                dense_sub[k].astype(pool_sub[k].dtype), pool_sub[k])
+                for k in pool_sub}
+        return {k: pool_sub[k].at[:, slot_ids].set(
+            dense_sub[k].astype(pool_sub[k].dtype), mode="drop")
+            for k in pool_sub}
+
+    return _zip_attn_subs(pool, dense, attn_fn, ssm_fn)
+
+
+def paged_clear(pool: list, page_ids) -> list:
+    """Mark the given pages empty (pos = -1) so a later owner never sees a
+    previous request's keys. Called by the engine when pages are freed;
+    k/v payloads are left in place — pos = -1 masks them everywhere."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def attn_fn(sub):
+        sub = dict(sub)
+        sub["pos"] = sub["pos"].at[:, ids].set(-1, mode="drop")
+        return sub
+
+    return _map_attn_subs(pool, attn_fn)
+
+
+def paged_prefill(params: dict, pool: list, tables: jax.Array,
+                  tokens: jax.Array, lengths: jax.Array,
+                  slot_ids: jax.Array, cfg: ModelConfig,
+                  enc_out: Optional[jax.Array] = None):
+    """Batched multi-slot prefill straight into the page pool.
+
+    tokens: (B, S) right-padded prompts; lengths: (B,) real lengths;
+    tables: (B, pages_per_slot) page tables of the destination slots;
+    slot_ids: (B,) destination slots for the SSM state (out-of-range =
+    dummy row, dropped). Returns (last-real-token logits (B,1,V), pool)."""
+    ps = pool_page_size(pool)
+    vcap = tables.shape[1] * ps if ps else None
+    logits, dense = prefill_batched(params, {"tokens": tokens}, cfg, lengths,
+                                    enc_out=enc_out, capacity=vcap)
+    S = tokens.shape[1]
+    claim = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                             tokens.shape)
+    return logits, paged_scatter(pool, dense, tables, claim,
+                                 slot_ids=slot_ids)
+
+
+def paged_decode_step(params: dict, pool: list, tables: jax.Array,
+                      tokens: jax.Array, pos: jax.Array, cfg: ModelConfig,
+                      enc_out: Optional[jax.Array] = None,
+                      live: Optional[jax.Array] = None):
+    """One batched decode step over the paged pool: gather each slot's
+    pages into the dense view, run the ordinary ``decode_step``, scatter
+    the one new row per slot back to its page. tokens/pos: (B, 1).
+
+    ``live`` (B,) bool marks slots whose state may advance; a stalled
+    (page-less) slot's attention write already drops on the missing page,
+    and ``live=False`` drops its SSM-state write too, so the step can be
+    retried bit-identically once a page frees."""
+    dense = paged_gather(pool, tables)
+    logits, new_dense = decode_step(params, dense, tokens, pos, cfg,
+                                    enc_out=enc_out)
+    return logits, paged_scatter(pool, new_dense, tables, pos, live=live)
 
 
 # ---------------------------------------------------------------------------

@@ -1,52 +1,214 @@
-"""Batched serving engine: continuous decode over a request pool, launched
-through the Wine ABI. Requests arrive asynchronously; slots are re-armed in
-place (compile-once/serve-many — the serving face of the paper's
-array-launch amortization).
+"""Serving engines: continuous decode over a request pool through the
+shared AOT ``CompileCache`` (compile-once/serve-many — the serving face of
+the paper's array-launch amortization).
 
-The engine no longer owns its own jit plumbing: the decode step and every
-prefill signature are AOT-compiled through a ``LaunchBackend``'s shared
-persistent ``CompileCache`` — the same cache the launcher uses — so a
-process (or a *later* process) that already launched this model serves its
-first token without paying trace+compile again, and vice versa."""
+Two engines share one driver (``_EngineBase.run``: admit -> grow -> step):
+
+``ServeEngine``      the fixed-partition baseline: every slot owns a
+                     private ``capacity``-row KV ring and admission
+                     prefills ONE slot per dispatch.
+``PagedServeEngine`` the paged subsystem: one shared page pool
+                     (``repro.serve.kv_pool``) backs every slot through
+                     per-slot page tables; admission packs a whole
+                     priority-ordered group of waiting prompts into ONE
+                     length-bucketed prefill executable; pages are
+                     allocated a page at a time as requests decode and
+                     batch-class requests are preempted (pages freed,
+                     request requeued) when interactive work needs the
+                     pool or the slots.
+
+Both engines guard KV overflow at admission: a prompt that cannot fit is
+rejected outright, and a generation budget is clamped so decode can never
+silently wrap the ring past live history (``finish_reason="capacity"``).
+Neither engine owns jit plumbing: the decode step and every prefill
+signature are AOT-compiled through a ``LaunchBackend``'s shared persistent
+``CompileCache`` — the same cache the launcher uses — so a process (or a
+*later* process) that already launched this model serves its first token
+without paying trace+compile again, and vice versa.
+"""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.backend import ArrayBackend
-from repro.models.lm import cache_init, decode_step, lm_init, prefill
+from repro.core.telemetry import RequestRecord, class_summary, slo_attainment
+from repro.models.lm import (cache_init, decode_step, paged_cache_init,
+                             paged_clear, paged_decode_step, paged_prefill,
+                             prefill)
 from repro.models.spec import ModelConfig
+from repro.serve.kv_pool import PagePool
+from repro.serve.scheduler import AdmissionScheduler, bucket_len
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)                      # identity semantics: a request is
+class Request:                            # a ticket, not a value
     rid: int
     prompt: np.ndarray                    # (S,)
     max_new: int
+    priority: str = "interactive"         # "interactive" | "batch"
     out: List[int] = field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None
+    # telemetry stamps (perf_counter seconds); budget = max_new after the
+    # capacity clamp. Reset by preemption: a preempted request restarts.
+    t_enqueue: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+    preemptions: int = 0
+    budget: Optional[int] = None
+
+    def record(self) -> RequestRecord:
+        n = len(self.out)
+        ttft = (self.t_first - self.t_enqueue) if self.t_first else 0.0
+        tpot = ((self.t_done - self.t_first) / (n - 1)
+                if n > 1 and self.t_done and self.t_first else 0.0)
+        return RequestRecord(rid=self.rid, priority=self.priority,
+                             ttft_s=ttft, tpot_s=tpot, n_tokens=n,
+                             preemptions=self.preemptions,
+                             finish=self.finish_reason or "length")
 
 
-class ServeEngine:
-    """Fixed-slot batched decoder (static shapes => one compiled program)."""
+class _EngineBase:
+    """Shared driver: scheduler-ordered admission, batched decode,
+    capacity guards, per-request/per-class telemetry."""
 
-    def __init__(self, cfg: ModelConfig, params, slots: int = 8,
-                 capacity: int = 256,
-                 backend: Optional[ArrayBackend] = None):
+    def __init__(self, cfg: ModelConfig, params, slots: int,
+                 backend: Optional[ArrayBackend],
+                 scheduler: Optional[AdmissionScheduler]):
         self.cfg, self.params = cfg, params
-        self.slots, self.capacity = slots, capacity
+        self.slots = slots
         self.backend = backend if backend is not None else ArrayBackend()
-        self.caches = cache_init(cfg, slots, capacity)
+        self.scheduler = scheduler if scheduler is not None \
+            else AdmissionScheduler()
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
         self.pos = jnp.zeros((slots, 1), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
+        self._stalled: set = set()        # slots waiting on a page
+        self.records: List[RequestRecord] = []
         self.stats = {"decoded": 0, "admitted": 0, "steps": 0,
+                      "rejected_over_capacity": 0, "capacity_clamped": 0,
+                      "preemptions": 0, "pool_exhausted": 0,
+                      "stall_steps": 0, "prefill_dispatches": 0,
                       "compile_sources": {}}
+
+    # -- capacity guard ----------------------------------------------------
+    def _request_capacity(self) -> int:
+        raise NotImplementedError
+
+    def _screen(self, req: Request) -> bool:
+        """Admission guard: reject a prompt that cannot fit; clamp the
+        generation budget so decode never wraps the ring past live
+        history. Prompt rows occupy [0, S); generated token t is written
+        at S + t - 1 when fed back, and the last token is never fed, so
+        S + budget - 1 <= capacity."""
+        cap = self._request_capacity()
+        S = len(req.prompt)
+        allowed = cap - S + 1
+        if S > cap or allowed <= 0:
+            req.done = True
+            req.finish_reason = "rejected_over_capacity"
+            req.t_done = time.perf_counter()
+            self.stats["rejected_over_capacity"] += 1
+            self.records.append(req.record())
+            return False
+        if req.max_new > allowed:
+            if req.budget is None:           # count once per request
+                self.stats["capacity_clamped"] += 1
+            req.budget = allowed
+        else:
+            req.budget = req.max_new
+        req.done = False
+        req.finish_reason = None
+        return True
+
+    # -- per-engine hooks --------------------------------------------------
+    def _admit(self) -> int:
+        """Admit from the scheduler into free slots; returns #admitted."""
+        raise NotImplementedError
+
+    def _pre_step(self) -> None:
+        """Hook before a decode step (page growth for the paged engine)."""
+
+    def _step_executable(self) -> Tuple[jax.Array, None]:
+        raise NotImplementedError
+
+    def _release_slot(self, i: int) -> None:
+        self.active[i] = None
+
+    # -- shared decode bookkeeping ----------------------------------------
+    def _finish(self, i: int, reason: Optional[str] = None) -> None:
+        req = self.active[i]
+        req.done = True
+        req.finish_reason = reason or req.finish_reason or (
+            "length" if req.budget == req.max_new else "capacity")
+        req.t_done = time.perf_counter()
+        self.records.append(req.record())
+        self._release_slot(i)
+
+    def step(self) -> None:
+        """One batched decode step across all slots."""
+        nxt = self._step_executable()
+        now = time.perf_counter()
+        self.stats["steps"] += 1
+        for i, req in enumerate(self.active):
+            if req is None or i in self._stalled:
+                continue
+            req.out.append(int(nxt[i]))
+            self.stats["decoded"] += 1
+            if req.t_first is None:
+                req.t_first = now
+            if len(req.out) >= req.budget:
+                self._finish(i)
+
+    def run(self, requests: List[Request], max_steps: int = 10_000) -> dict:
+        t0 = time.perf_counter()
+        for r in requests:
+            self.scheduler.enqueue(r)
+        while ((self.scheduler.has_pending()
+                or any(a is not None for a in self.active))
+               and self.stats["steps"] < max_steps):
+            admitted = self._admit()
+            if any(a is not None for a in self.active):
+                self._pre_step()
+                self.step()
+            elif not admitted and self.scheduler.has_pending():
+                # idle engine that cannot place the head request: fail it
+                # loudly instead of spinning (pool smaller than one prompt)
+                req = self.scheduler.pop_next()
+                req.done, req.finish_reason = True, "pool_exhausted"
+                req.t_done = time.perf_counter()
+                self.stats["pool_exhausted"] += 1
+                self.records.append(req.record())
+        self.stats["wall_s"] = time.perf_counter() - t0
+        self.stats["classes"] = class_summary(self.records)
+        slo = self.scheduler.target_first_result_s
+        if slo is not None:
+            self.stats["slo_attainment"] = slo_attainment(self.records, slo)
+        return self.stats
+
+
+# ----------------------------------------------------------------------
+# Fixed-partition baseline
+# ----------------------------------------------------------------------
+
+class ServeEngine(_EngineBase):
+    """Fixed-slot batched decoder: every slot owns a private KV ring of
+    ``capacity`` rows (static partition), admission prefills one slot per
+    dispatch (the paper's serial-launch analogue at the serving layer)."""
+
+    def __init__(self, cfg: ModelConfig, params, slots: int = 8,
+                 capacity: int = 256,
+                 backend: Optional[ArrayBackend] = None,
+                 scheduler: Optional[AdmissionScheduler] = None):
+        super().__init__(cfg, params, slots, backend, scheduler)
+        self.capacity = capacity
+        self.caches = cache_init(cfg, slots, capacity)
 
         def step_fn(p, c, t, po):
             return decode_step(p, c, t, po, cfg)
@@ -56,6 +218,9 @@ class ServeEngine:
             extras=("serve-step", cfg.name, slots, capacity))
         self.stats["compile_sources"]["step"] = src
         self._prefill_by_len: dict = {}   # prompt length -> AOT executable
+
+    def _request_capacity(self) -> int:
+        return self.capacity
 
     def _prefill(self, tokens):
         """AOT prefill, one executable per prompt length, shared-cache."""
@@ -75,10 +240,13 @@ class ServeEngine:
 
     def admit(self, req: Request) -> bool:
         """Prefill a request into a free slot (one-slot batch prefill)."""
+        if req.budget is None and not self._screen(req):
+            return False                      # rejected: over capacity
         for i, a in enumerate(self.active):
             if a is None:
                 logits, caches = self._prefill(
                     jnp.asarray(req.prompt, jnp.int32)[None])
+                self.stats["prefill_dispatches"] += 1
                 # write slot i of every cache leaf
                 def put(dst, src):
                     return jax.lax.dynamic_update_index_in_dim(
@@ -89,37 +257,361 @@ class ServeEngine:
                     lambda d, s: jax.vmap(put)(d, s), self.caches, caches)
                 tok = int(jnp.argmax(logits[0, -1]))
                 req.out.append(tok)
+                req.t_first = time.perf_counter()
                 self.tokens = self.tokens.at[i, 0].set(tok)
                 self.pos = self.pos.at[i, 0].set(len(req.prompt))
                 self.active[i] = req
                 self.stats["admitted"] += 1
+                if len(req.out) >= req.budget:
+                    self._finish(i)
                 return True
         return False
 
-    def step(self):
-        """One batched decode step across all slots."""
+    def _admit(self) -> int:
+        n = 0
+        while self.scheduler.has_pending():
+            head = self.scheduler.peek_next()
+            if not self._screen(head):
+                self.scheduler.pop_next()
+                continue
+            if not self.admit(head):
+                break
+            self.scheduler.pop_next()
+            n += 1
+        return n
+
+    def _step_executable(self):
         logits, self.caches = self._step(self.params, self.caches,
                                          self.tokens, self.pos)
         nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
         self.tokens = nxt[:, None]
         self.pos = self.pos + 1
-        self.stats["steps"] += 1
+        return np.asarray(nxt)
+
+
+# ----------------------------------------------------------------------
+# Paged engine: shared pool, batched prefill, priority preemption
+# ----------------------------------------------------------------------
+
+class PagedServeEngine(_EngineBase):
+    """Continuous-batching decoder over one shared KV page pool.
+
+    * capacity is POOLED: ``pool_pages`` pages back all ``slots`` slots;
+      a slot holds at most ``pages_per_slot`` pages (its virtual capacity
+      ``vcap = pages_per_slot * page_size`` rows), allocated one page at a
+      time as its request decodes — short requests never reserve long-
+      request memory, so ``pool_pages`` can be far below
+      ``slots * pages_per_slot`` (oversubscription);
+    * admission pops a priority-ordered GROUP of same-bucket prompts and
+      prefills them in ONE padded executable (``batched_prefill=False``
+      reverts to the exact-shape one-slot loop — the A/B in ``fig_serve``);
+    * when the pool or the slots are exhausted, batch-class requests are
+      preempted for interactive ones (youngest victim first; pages freed,
+      victim requeued at the front of its class and restarted on
+      re-admission), with admission-time preemption gated by the
+      scheduler's ``target_first_result_s`` SLO; a request that can't
+      grow and has no victim STALLS until peers free pages, a full-pool
+      deadlock preempts one victim to unblock the rest, and only a lone
+      request larger than the entire pool is finished early
+      (``finish_reason="pool_exhausted"``).
+
+    Token output is bit-identical to ``ServeEngine`` on the same trace
+    (same prompts, same admission shapes): the compiled step gathers each
+    slot's pages into exactly the dense view ``decode_step`` always ran on.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, slots: int = 8,
+                 page_size: int = 16, pages_per_slot: int = 8,
+                 pool_pages: Optional[int] = None,
+                 backend: Optional[ArrayBackend] = None,
+                 scheduler: Optional[AdmissionScheduler] = None,
+                 batched_prefill: bool = True):
+        super().__init__(cfg, params, slots, backend, scheduler)
+        if pool_pages is None:
+            pool_pages = slots * pages_per_slot
+        self.pool = PagePool(pool_pages, page_size, slots, pages_per_slot)
+        self.kv = paged_cache_init(cfg, slots, pool_pages, page_size)
+        self.tables = jnp.asarray(self.pool.table_array())
+        self._tables_dirty = False
+        self.batched_prefill = batched_prefill
+        # right-padded batched prefill is unsound for SSM state (the
+        # recurrence would absorb pad tokens): group by exact length then
+        self._pad_safe = not any(b.ssm is not None
+                                 for g in cfg.groups for b in g.pattern)
+        self._admit_order = 0                  # preemption recency clock
+        self._admit_seq: List[int] = [0] * slots
+
+        def step_fn(p, kv, tables, t, po, live):
+            return paged_decode_step(p, kv, tables, t, po, cfg, live=live)
+
+        self._live = jnp.ones((slots,), bool)
+        self._step, src = self.backend.compile(
+            step_fn, (params, self.kv, self.tables, self.tokens, self.pos,
+                      self._live),
+            extras=("serve-paged-step", cfg.name, slots, pool_pages,
+                    page_size, pages_per_slot))
+        self.stats["compile_sources"]["step"] = src
+        self._prefill_by_shape: dict = {}      # (B, S) -> AOT executable
+
+    def _request_capacity(self) -> int:
+        return self.pool.vcap
+
+    # -- prefill executables ----------------------------------------------
+    def _prefill_exec(self, B: int, S: int):
+        compiled = self._prefill_by_shape.get((B, S))
+        if compiled is None:
+            cfg = self.cfg
+
+            def prefill_fn(p, kv, trows, toks, lens, sids):
+                return paged_prefill(p, kv, trows, toks, lens, sids, cfg)
+
+            example = (self.params, self.kv,
+                       jnp.zeros((B, self.pool.pages_per_slot), jnp.int32),
+                       jnp.zeros((B, S), jnp.int32),
+                       jnp.zeros((B,), jnp.int32),
+                       jnp.zeros((B,), jnp.int32))
+            compiled, src = self.backend.compile(
+                prefill_fn, example,
+                extras=("serve-paged-prefill", cfg.name, self.pool.n_pages,
+                        self.pool.page_size, self.pool.pages_per_slot))
+            self._prefill_by_shape[(B, S)] = compiled
+            self.stats["compile_sources"][f"prefill_b{B}_s{S}"] = src
+        return compiled
+
+    # -- preemption --------------------------------------------------------
+    def _preempt(self, i: int) -> None:
+        """Evict slot ``i``'s (batch-class) request: free + clear its
+        pages, requeue it at the front of its class, restart-on-readmit."""
+        req = self.active[i]
+        req.out.clear()
+        req.t_first = None
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.scheduler.requeue_front(req)
+        self._release_slot(i)
+
+    def _pick_victim(self, exclude: Optional[int] = None) -> Optional[int]:
+        """Youngest-admitted preemptible (batch-class) active slot: the
+        least sunk work is thrown away, and FIFO order within the batch
+        class is preserved on requeue."""
+        best = None
+        for i, req in enumerate(self.active):
+            if req is None or i == exclude:
+                continue
+            if req.priority not in self.scheduler.preemptible:
+                continue
+            if best is None or self._admit_seq[i] > self._admit_seq[best]:
+                best = i
+        return best
+
+    def _ensure_pages(self, need: int, priority: str,
+                      exclude: Optional[int] = None,
+                      admission: bool = False) -> bool:
+        """Make ``need`` pages available, preempting batch-class work when
+        the requester is interactive. Admission-time preemption is gated
+        by the scheduler's TTFT SLO (batch keeps its slots while the queue
+        wait is comfortably inside the target); an already-RUNNING
+        interactive request growing a page always may preempt — stalling
+        it would burn its TPOT for nothing."""
+        while self.pool.free_pages < need:
+            if priority != "interactive":
+                return False
+            if (admission
+                    and self.scheduler.target_first_result_s is not None
+                    and not self.scheduler.should_preempt()):
+                return False
+            victim = self._pick_victim(exclude=exclude)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _release_slot(self, i: int) -> None:
+        freed = self.pool.free_slot(i)
+        if freed:
+            self.kv = paged_clear(self.kv, freed)
+            self._tables_dirty = True
+        self.active[i] = None
+
+    # -- admission ---------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        if not self._pad_safe:
+            return n                          # exact-length groups (SSM)
+        return min(bucket_len(n), self.pool.vcap)
+
+    def _admit(self) -> int:
+        if self._stalled:
+            # page-starved: admitting more work would steal the pages the
+            # stalled slots are waiting for
+            return 0
+        # slot pressure: an overdue interactive head may evict a batch slot
+        if (all(a is not None for a in self.active)
+                and self.scheduler.pending("interactive")
+                and self.scheduler.should_preempt()):
+            victim = self._pick_victim()
+            if victim is not None:
+                self._preempt(victim)
+        free = [i for i, a in enumerate(self.active) if a is None]
+        if not free:
+            return 0
+        # screen the head until it is admittable (pop rejects outright)
+        while self.scheduler.has_pending():
+            head = self.scheduler.peek_next()
+            if self._screen(head):
+                break
+            self.scheduler.pop_next()
+        if not self.scheduler.has_pending():
+            return 0
+        head = self.scheduler.peek_next()
+        if not self._ensure_pages(
+                self.pool.pages_for_tokens(len(head.prompt)), head.priority,
+                admission=True):
+            return 0
+        free = [i for i, a in enumerate(self.active) if a is None]
+        if self.batched_prefill:
+            b = self._bucket(len(head.prompt))
+            group = self.scheduler.pop_group(
+                len(free), match=lambda r: self._bucket(len(r.prompt)) == b)
+        else:
+            group = [self.scheduler.pop_next()]
+        placed: List[Tuple[int, Request]] = []
+        leftover: List[Request] = []
+        for req in group:
+            if not self._screen(req):
+                continue                     # rejected + recorded in _screen
+            need = self.pool.pages_for_tokens(len(req.prompt))
+            free = [i for i, a in enumerate(self.active) if a is None
+                    and all(i != s for s, _ in placed)]
+            if not free or not self._ensure_pages(need, req.priority,
+                                                  admission=True):
+                leftover.append(req)
+                continue
+            slot = free.pop(0)
+            self.pool.alloc(slot, need)
+            placed.append((slot, req))
+        for req in reversed(leftover):       # restore original queue order
+            self.scheduler.requeue_front(req)
+        if placed:
+            self._prefill_commit(placed)
+        return len(placed)
+
+    def _prefill_commit(self, placed: List[Tuple[int, Request]]) -> None:
+        """One prefill dispatch for the whole group. In batched mode the
+        executable has a fixed batch of ``slots`` rows — absent slots ride
+        as dummy rows whose table is -1 and slot id out of range, so every
+        one of their writes is dropped by the scatter."""
+        if self.batched_prefill:
+            S = max(self._bucket(len(r.prompt)) for _, r in placed)
+            B = self.slots
+        else:
+            S = len(placed[0][1].prompt)     # exact shape, no padding
+            B = 1
+        toks = np.zeros((B, S), np.int64)
+        lens = np.zeros((B,), np.int64)
+        trows = np.full((B, self.pool.pages_per_slot), -1, np.int32)
+        sids = np.full((B,), self.slots, np.int64)      # OOB = dummy row
+        table = self.pool.table_array()
+        for r, (slot, req) in enumerate(placed):
+            n = len(req.prompt)
+            toks[r, :n] = req.prompt
+            lens[r] = n
+            trows[r] = table[slot]
+            sids[r] = slot
+        exe = self._prefill_exec(B, S)
+        logits, self.kv = exe(self.params, self.kv,
+                              jnp.asarray(trows, jnp.int32),
+                              jnp.asarray(toks, jnp.int32),
+                              jnp.asarray(lens, jnp.int32),
+                              jnp.asarray(sids, jnp.int32))
+        self.stats["prefill_dispatches"] += 1
+        first = np.asarray(jnp.argmax(logits[:, -1], -1), np.int64)
+        now = time.perf_counter()
+        for r, (slot, req) in enumerate(placed):
+            tok = int(first[r])
+            req.out.append(tok)
+            req.t_first = now
+            self.tokens = self.tokens.at[slot, 0].set(tok)
+            self.pos = self.pos.at[slot, 0].set(len(req.prompt))
+            self.active[slot] = req
+            self._admit_order += 1
+            self._admit_seq[slot] = self._admit_order
+            self.stats["admitted"] += 1
+            if len(req.out) >= req.budget:
+                self._finish(slot)
+        self._tables_dirty = True
+
+    # -- decode-time page growth ------------------------------------------
+    def _pre_step(self) -> None:
+        """Before each step, make sure every active slot owns the page its
+        next KV write lands in. A slot that can't get one (no free page,
+        no preemptible victim) STALLS: its in-step KV write targets a
+        missing page and is dropped by the scatter, its output token is
+        discarded, and its tokens/pos don't advance — the identical step
+        is retried once another request frees pages. When EVERY active
+        slot is stalled (nothing will ever free) one victim is preempted
+        to unblock the rest; a lone request larger than the entire pool
+        is finished early with ``finish_reason="pool_exhausted"``."""
+        self._stalled.clear()
+        ps = self.pool.page_size
         for i, req in enumerate(self.active):
             if req is None:
                 continue
-            req.out.append(int(nxt[i]))
-            self.stats["decoded"] += 1
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.active[i] = None
+            nxt_pos = len(req.prompt) + len(req.out) - 1   # row written now
+            v = nxt_pos % self.pool.vcap
+            if v // ps < self.pool.n_allocated(i):
+                continue                                   # page in hand
+            if self.pool.alloc(i, 1) is not None:
+                self._tables_dirty = True
+                continue
+            if self._ensure_pages(1, req.priority, exclude=i):
+                self.pool.alloc(i, 1)
+                self._tables_dirty = True
+                continue
+            self._stalled.add(i)
+            self.stats["stall_steps"] += 1
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if act and all(i in self._stalled for i in act):
+            # full-pool deadlock: nobody can free pages for anybody.
+            # Preempt one victim (batch-class first, youngest-admitted
+            # first — even an interactive victim restarts rather than
+            # truncates) so the survivors decode on; each deadlock round
+            # shrinks the resident set until it fits. Only a request
+            # ALONE on the pool — the pool itself is smaller than its
+            # demand — is finished early.
+            victim = max(act, key=lambda i: (
+                self.active[i].priority in self.scheduler.preemptible,
+                self._admit_seq[i]))
+            self._stalled.discard(victim)
+            if len(act) == 1:
+                self.stats["pool_exhausted"] += 1
+                self._finish(victim, reason="pool_exhausted")
+            else:
+                self._preempt(victim)
 
-    def run(self, requests: List[Request], max_steps: int = 10_000):
-        pending = list(requests)
-        t0 = time.perf_counter()
-        while (pending or any(self.active)) and self.stats["steps"] < max_steps:
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
-            if any(a is not None for a in self.active):
-                self.step()
-        self.stats["wall_s"] = time.perf_counter() - t0
-        return self.stats
+    def _step_executable(self):
+        if self._tables_dirty:
+            self.tables = jnp.asarray(self.pool.table_array())
+            self._tables_dirty = False
+        keep = np.ones((self.slots,), bool)
+        if self._stalled:
+            keep[list(self._stalled)] = False
+        self._live = jnp.asarray(keep)
+        logits, self.kv = self._step(self.params, self.kv, self.tables,
+                                     self.tokens, self.pos, self._live)
+        nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        if self._stalled:
+            # stalled slots hold position: same token, same pos, identical
+            # retry next step (their page-less KV write was dropped and
+            # `live` dropped their SSM-state write)
+            self.tokens = jnp.where(keep[:, None], nxt[:, None], self.tokens)
+            self.pos = self.pos + keep[:, None].astype(jnp.int32)
+        else:
+            self.tokens = nxt[:, None]
+            self.pos = self.pos + 1
+        return np.asarray(nxt)
+
+    def pool_stats(self) -> Dict[str, float]:
+        s = dict(self.pool.stats)
+        s["occupancy"] = self.pool.occupancy
+        s["free_pages"] = self.pool.free_pages
+        return s

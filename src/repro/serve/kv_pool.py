@@ -1,0 +1,125 @@
+"""Shared KV page pool: host-side allocator behind the paged serving engine.
+
+The paper's scheduler hands every instance a slice of a SHARED machine
+instead of statically partitioning the cluster per user; this is the same
+move for KV memory. One pool of ``n_pages`` fixed-size pages backs every
+slot; a slot owns an ordered list of pages (its page table) that grows a
+page at a time as its request decodes and returns to the free list the
+moment the request finishes or is preempted. Capacity is therefore pooled
+across slots: eight slots over a 64-page pool can hold one 60-page request
+plus seven short ones, where the fixed partition would cap each at 8.
+
+This class is pure bookkeeping — numpy tables, python free list. The
+device-side mirror (the paged cache pytree and the compiled gather/scatter
+paths) lives in ``repro.models.lm``; ``repro.serve.engine`` keeps the two
+in sync by pushing ``table_array()`` as a runtime argument of the compiled
+step (page traffic never recompiles anything).
+
+Invariants (asserted in tests/test_serve.py):
+  * every page is either free or owned by exactly one slot;
+  * a slot's table is a -1-padded prefix of owned pages in alloc order;
+  * ``free_pages + used_pages == n_pages`` at all times;
+  * ``watermark`` is the high-water mark of ``used_pages``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class PagePool:
+    """Fixed-size page allocator with per-slot page tables."""
+
+    def __init__(self, n_pages: int, page_size: int, slots: int,
+                 pages_per_slot: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("n_pages and page_size must be >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.slots = slots
+        self.pages_per_slot = pages_per_slot
+        self.vcap = pages_per_slot * page_size   # per-slot virtual capacity
+        self.table = np.full((slots, pages_per_slot), -1, np.int32)
+        self.owner = np.full(n_pages, -1, np.int32)      # page -> slot | -1
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))  # pop() = 0
+        self._count = np.zeros(slots, np.int32)          # pages per slot
+        self.stats = {"allocs": 0, "frees": 0, "alloc_failures": 0,
+                      "watermark": 0}
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.used_pages / self.n_pages
+
+    def n_allocated(self, slot: int) -> int:
+        return int(self._count[slot])
+
+    def pages_of(self, slot: int) -> List[int]:
+        return [int(p) for p in self.table[slot, : self._count[slot]]]
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache rows (ring-capped)."""
+        n_tokens = min(n_tokens, self.vcap)
+        return -(-n_tokens // self.page_size)
+
+    def table_array(self) -> np.ndarray:
+        """Snapshot for the device-side page-table argument."""
+        return self.table.copy()
+
+    # -- mutation ----------------------------------------------------------
+    def alloc(self, slot: int, n: int = 1) -> Optional[List[int]]:
+        """Append ``n`` pages to ``slot``'s table. All-or-nothing: returns
+        the page ids, or None (counted in ``alloc_failures``) when the
+        pool or the slot's table can't take them."""
+        have = int(self._count[slot])
+        if n < 0 or have + n > self.pages_per_slot or n > len(self._free):
+            self.stats["alloc_failures"] += 1
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        for k, p in enumerate(got):
+            self.table[slot, have + k] = p
+            self.owner[p] = slot
+        self._count[slot] = have + n
+        self.stats["allocs"] += n
+        self.stats["watermark"] = max(self.stats["watermark"],
+                                      self.used_pages)
+        return got
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Release every page owned by ``slot``; returns the freed ids
+        (the engine clears their device-side ``pos`` before reuse)."""
+        freed = self.pages_of(slot)
+        for p in freed:
+            self.owner[p] = -1
+            self._free.append(p)
+        self.table[slot, :] = -1
+        self._count[slot] = 0
+        self.stats["frees"] += len(freed)
+        return freed
+
+    def reset(self) -> None:
+        for s in range(self.slots):
+            self.free_slot(s)
+
+    def check(self) -> None:
+        """Assert the allocator invariants (test hook)."""
+        seen = set(self._free)
+        assert len(seen) == len(self._free), "free list holds duplicates"
+        for s in range(self.slots):
+            cnt = int(self._count[s])
+            row = self.table[s]
+            assert (row[cnt:] == -1).all(), "table not -1-padded"
+            for p in row[:cnt]:
+                assert int(self.owner[p]) == s, "owner map out of sync"
+                assert int(p) not in seen, "page both free and owned"
+                seen.add(int(p))
+        assert len(seen) == self.n_pages, "pages leaked"

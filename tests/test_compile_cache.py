@@ -1,0 +1,117 @@
+"""CompileCache disk-tier policy: LRU-by-bytes eviction, jax-version
+stamping, and the env-var budget knob."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.compile_cache import CompileCache, _version_tag
+
+
+def _fn(salt):
+    """A distinct tiny program per salt (closure const changes the key)."""
+    def f(x, _s=salt):
+        return x * _s + _s
+    return f
+
+
+X = (np.ones((4,), np.float32),)
+
+
+def _aotx_files(d):
+    return sorted(f for f in os.listdir(d) if f.endswith(".aotx"))
+
+
+def _entry_size(tmp_path):
+    d = str(tmp_path / "probe")
+    c = CompileCache(cache_dir=d)
+    c.compile(_fn(0), X, extras=("probe",))
+    files = _aotx_files(d)
+    assert files, "spill did not happen; cannot size an entry"
+    return os.path.getsize(os.path.join(d, files[0]))
+
+
+def test_lru_eviction_by_bytes(tmp_path):
+    size = _entry_size(tmp_path)
+    d = str(tmp_path / "aot")
+    cache = CompileCache(cache_dir=d, max_bytes=int(size * 1.5))
+    cache.compile(_fn(1), X, extras=("a",))
+    time.sleep(0.05)                       # distinct mtimes for LRU order
+    cache.compile(_fn(2), X, extras=("b",))
+    # two entries > budget: the older one must have been evicted
+    assert cache.stats["evictions"] >= 1
+    assert len(_aotx_files(d)) == 1
+    fresh = CompileCache(cache_dir=d)      # new process, same dir
+    _, src_a = fresh.compile(_fn(1), X, extras=("a",))
+    _, src_b = fresh.compile(_fn(2), X, extras=("b",))
+    assert src_a == "compiled"             # evicted: cold again
+    assert src_b == "disk"                 # survivor: warm across processes
+
+
+def test_lru_recency_refreshed_by_disk_hit(tmp_path):
+    size = _entry_size(tmp_path)
+    d = str(tmp_path / "aot")
+    warm = CompileCache(cache_dir=d)       # unbounded writer
+    warm.compile(_fn(1), X, extras=("a",))
+    time.sleep(0.05)
+    warm.compile(_fn(2), X, extras=("b",))
+    time.sleep(0.05)
+    # a disk hit on A refreshes its mtime past B's
+    reader = CompileCache(cache_dir=d, max_bytes=int(size * 2.5))
+    _, src = reader.compile(_fn(1), X, extras=("a",))
+    assert src == "disk"
+    time.sleep(0.05)
+    reader.compile(_fn(3), X, extras=("c",))   # spill -> prune over budget
+    assert reader.stats["evictions"] >= 1
+    check = CompileCache(cache_dir=d)
+    _, src_a = check.compile(_fn(1), X, extras=("a",))
+    _, src_b = check.compile(_fn(2), X, extras=("b",))
+    assert src_a == "disk"                 # recently used: kept
+    assert src_b == "compiled"             # least recently used: evicted
+
+
+def test_alien_version_spills_are_dropped(tmp_path):
+    d = str(tmp_path / "aot")
+    os.makedirs(d)
+    stale = os.path.join(d, "0" * 64 + ".deadbeef.aotx")
+    with open(stale, "wb") as f:
+        f.write(b"serialized-by-another-jax")
+    cache = CompileCache(cache_dir=d)
+    cache.compile(_fn(1), X, extras=("a",))
+    assert not os.path.exists(stale)
+    assert cache.stats["version_drops"] == 1
+    # current-version spills carry the version tag in their name
+    assert all(f.endswith(f".{_version_tag()}.aotx")
+               for f in _aotx_files(d))
+
+
+def test_max_bytes_env_knob(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_MAX_BYTES", "12345")
+    cache = CompileCache(cache_dir=str(tmp_path / "aot"))
+    assert cache.max_bytes == 12345
+    monkeypatch.delenv("REPRO_COMPILE_CACHE_MAX_BYTES")
+    assert CompileCache(cache_dir=str(tmp_path / "aot2")).max_bytes is None
+    # explicit argument wins over the env default
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_MAX_BYTES", "12345")
+    assert CompileCache(cache_dir=str(tmp_path / "aot3"),
+                        max_bytes=77).max_bytes == 77
+
+
+def test_unbounded_cache_never_evicts(tmp_path):
+    d = str(tmp_path / "aot")
+    cache = CompileCache(cache_dir=d)
+    for s in range(3):
+        cache.compile(_fn(s + 10), X, extras=("u", s))
+    assert cache.stats["evictions"] == 0
+    assert len(_aotx_files(d)) == 3
+
+
+@pytest.mark.parametrize("persistent", [True, False])
+def test_memory_tier_unaffected_by_budget(tmp_path, persistent):
+    """Eviction is a DISK policy: the in-memory tier still hits."""
+    cache = CompileCache(cache_dir=str(tmp_path / "aot"),
+                         persistent=persistent, max_bytes=1)
+    cache.compile(_fn(1), X, extras=("m",))
+    _, src = cache.compile(_fn(1), X, extras=("m",))
+    assert src == "memory"
