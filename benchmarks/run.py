@@ -431,6 +431,118 @@ def bench_fig_serve():
     return rows
 
 
+def bench_fig_dist():
+    """fig_dist: the distributed launch fabric (scheduler -> node level).
+
+    (a) weak scaling: 1/2/4 local nodes, tasks per node held constant —
+        t_launch per instance as the fabric widens (thread-simulated
+        nodes share one CPU, so the point is protocol overhead, not
+        speedup: the per-instance cost must stay the same order);
+    (b) node-kill recovery: one of two nodes is killed mid-run; the
+        heartbeat lease expires, the dead node's in-flight waves feed
+        back through the barrier-free speculative re-dispatch, and the
+        wall clock must stay < 2x the no-failure run — with every task's
+        result produced exactly once.
+    """
+    import threading
+
+    from repro.core.compile_cache import CompileCache
+    from repro.core.llmr import LLMapReduce
+    from repro.dist.backend import DistributedBackend
+
+    per_node = 512 if _QUICK else 1024
+    wave = 128
+    reps = 3 if _QUICK else 5
+    rows = []
+
+    # -- (a) weak scaling -------------------------------------------------
+    for nodes in (1, 2, 4):
+        n = per_node * nodes
+        base = np.random.default_rng(5).standard_normal((n, 1536))
+        loader = _wave_loader(base)
+        cache = CompileCache(cache_dir=tempfile.mkdtemp(prefix="repro-aot-"))
+        be = DistributedBackend(n_nodes=nodes, cache=cache,
+                                heartbeat_timeout_s=10.0)
+        llmr = LLMapReduce(wave_size=wave, backend=be)
+        llmr.map_reduce(_app_wave, loader, n_tasks=n)          # warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            _, rep = llmr.map_reduce(_app_wave, loader, n_tasks=n)
+            ts.append(time.perf_counter() - t0)
+        t = float(np.median(ts))
+        rows.append((f"fig_dist_nodes{nodes}", t * 1e6 / n,
+                     f"total_s={t:.4f} n={n} waves={rep.waves} "
+                     f"per_node={per_node} (weak scaling)"))
+        be.close()
+
+    # -- (b) node-kill recovery ------------------------------------------
+    # big enough that the lease-expiry window is a small fraction of the
+    # run (a real cluster's detection latency amortizes the same way);
+    # the lease itself sits well above this box's thread-scheduling
+    # jitter — a beat missed under GIL load must not read as a death
+    n = per_node * 16
+    base = np.random.default_rng(6).standard_normal((n, 1536))
+    loader = _wave_loader(base)
+    expect = jax.vmap(_app_wave)(loader(0, n))
+
+    # one shared spill dir: every fresh fabric warm-starts from disk
+    kill_cache_dir = tempfile.mkdtemp(prefix="repro-aot-")
+
+    def run(kill_after=None):
+        # a killed node cannot be reused: every run gets a fresh fabric.
+        # depth 4: waves keep flowing to surviving nodes while the dead
+        # node's slots await lease expiry (stall window = detection only)
+        be = DistributedBackend(
+            n_nodes=4, cache=CompileCache(cache_dir=kill_cache_dir),
+            depth=4, heartbeat_timeout_s=0.25, heartbeat_s=0.02)
+        llmr = LLMapReduce(wave_size=wave, backend=be)
+        llmr.map_reduce(_app_wave, loader, n_tasks=n)          # warm
+        killer = None
+        if kill_after is not None:
+            killer = threading.Timer(kill_after,
+                                     be.agents["node3"].kill)
+            killer.start()
+        t0 = time.perf_counter()
+        out, rep = llmr.map_reduce(_app_wave, loader, n_tasks=n)
+        dt = time.perf_counter() - t0
+        if killer is not None:
+            killer.join()
+        ok = np.allclose(np.asarray(out), np.asarray(expect),
+                         rtol=1e-4, atol=1e-4)
+        be.close()
+        return dt, rep, ok
+
+    # medians over alternating clean/killed pairs: a single wall on a
+    # shared box swings ~2x with load, which would drown the recovery
+    # signal the < 2x bar is meant to measure
+    clean_ts, kill_ts, oks, rep_k = [], [], [], None
+    failures_seen = 0
+    for _ in range(3):
+        dt, _, ok = run()
+        clean_ts.append(dt)
+        oks.append(ok)
+        dt, rep_k, ok = run(kill_after=max(0.05, dt * 0.25))
+        kill_ts.append(dt)
+        oks.append(ok and rep_k.n_instances == n)
+        failures_seen += rep_k.node_failures
+    if failures_seen == 0:
+        # a kill that never landed in-flight measures nothing: fail the
+        # smoke loudly instead of passing a vacuous recovery row
+        raise RuntimeError("fig_dist: node kill never stranded a wave "
+                           "(0 node_failures across 3 killed runs)")
+    t_clean = float(np.median(clean_ts))
+    t_kill = float(np.median(kill_ts))
+    redis = [r for r in rep_k.records if r.redispatch]
+    rows.append(("fig_dist_node_kill_recovery", t_kill / t_clean,
+                 f"clean_s={t_clean:.3f} killed_s={t_kill:.3f} "
+                 f"node_failures={rep_k.node_failures} "
+                 f"redispatched_waves={len(redis)} "
+                 f"results_exactly_once={all(oks)} "
+                 f"(median of 3 pairs; must stay < 2x)"))
+    return rows
+
+
 _CACHE_PROBE = """
 import os, numpy as np
 import jax, jax.numpy as jnp
@@ -552,6 +664,7 @@ BENCHES = {
     "fig7_backends": bench_fig7_backend_rate,
     "fig_autoscale": bench_fig_autoscale,
     "fig_serve": bench_fig_serve,
+    "fig_dist": bench_fig_dist,
     "cache": bench_persistent_compile_cache,
     "wine": bench_wine_env_setup,
     "train": bench_train_steps,

@@ -5,11 +5,18 @@ k executes), with straggler telemetry, per-level launch-tree timings, a
 persistent AOT compile cache, plus the paper-scale model comparison.
 
     PYTHONPATH=src python examples/massive_launch.py [--n 16384]
-        [--wave auto|<int>] [--backend pipelined|array|serial] [--compare]
+        [--wave auto|<int>] [--backend pipelined|array|serial]
+        [--nodes N] [--compare]
 
 ``--wave auto`` engages the measured-telemetry WaveController: wave sizes
 (and node/core fan-out) are picked per wave from t_schedule /
 t_first_result / drain, AIMD-style, instead of a static knob.
+
+``--nodes N`` (N > 1) launches through the distributed fabric
+(``repro.dist``): one dispatch per wave fans out across N local node
+agents — each with its own backend, compile cache, and heartbeat lease —
+and the per-node split is printed after the launch. This is the paper's
+scheduler -> node -> core tree with ALL THREE levels real.
 """
 import argparse
 import time
@@ -21,20 +28,31 @@ from repro.core.compile_cache import CompileCache
 from repro.core.launch_model import CURVES, copy_time
 from repro.core.llmr import LLMapReduce
 from repro.core.staging import stage_parallel_pull, synth_env, tree_bytes
-from repro.core.telemetry import table
+from repro.core.telemetry import nodes_rollup, table
 
 
 def app(x):
     return (x * x).sum()
 
 
+def make_launch_backend(kind, cache, args):
+    if args.nodes > 1:
+        node_kind = "array" if kind == "serial" else kind
+        return make_backend("dist", cache=cache, n_nodes=args.nodes,
+                            node_backend=node_kind)
+    return make_backend(kind, cache=cache)
+
+
 def run_launch(kind, cache, args, inputs):
-    llmr = LLMapReduce(wave_size=args.wave,
-                       backend=make_backend(kind, cache=cache))
+    backend = make_launch_backend(kind, cache, args)
+    llmr = LLMapReduce(wave_size=args.wave, backend=backend)
     t0 = time.perf_counter()
     outs, report = llmr.map_reduce(app, inputs,
                                    reduce_fn=lambda xs: np.asarray(xs).sum())
-    return outs, report, time.perf_counter() - t0
+    dt = time.perf_counter() - t0
+    if hasattr(backend, "close"):
+        backend.close()
+    return outs, report, dt
 
 
 def main():
@@ -48,6 +66,10 @@ def main():
                          "WaveController (default)")
     ap.add_argument("--backend", default="pipelined",
                     choices=("pipelined", "array", "serial"))
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="launch through the distributed fabric with this "
+                         "many local node agents (>1 engages repro.dist; "
+                         "each node runs its own --backend)")
     ap.add_argument("--compare", action="store_true",
                     help="also time the array backend for contrast")
     ap.add_argument("--cache-dir", default=None,
@@ -81,6 +103,13 @@ def main():
         picks = ", ".join(f"{d.wave}({d.reason.split(':')[0]})"
                           for d in report.autoscale)
         print(f"autoscaled waves: {picks}")
+    if args.nodes > 1:
+        print(f"per-node split across the fabric "
+              f"({report.node_failures} node failures):")
+        for nid, agg in sorted(nodes_rollup(report.records).items()):
+            print(f"  {nid}: {agg['instances']:,} instances over "
+                  f"{agg['waves']} wave shards, "
+                  f"{agg['t_busy']:.2f}s busy")
     print("\nper-wave launch records (per-level: sched -> node -> core):")
     print(table(report.records[:4], title=f"first waves of {args.n}"))
     if args.compare:

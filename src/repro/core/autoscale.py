@@ -71,6 +71,11 @@ class WaveController:
 
     n_tasks: int
     devices: int = 1
+    # hosts behind the backend (the distributed fabric's alive-node count):
+    # a wave is sharded node-first, so the parallel width a wave must at
+    # least cover is nodes x devices, and waves never shrink below the
+    # fleet size (a wave smaller than the fleet idles whole nodes)
+    nodes: int = 1
     start_wave: Optional[int] = None
     min_wave: int = 64
     max_wave: int = 4096
@@ -85,6 +90,8 @@ class WaveController:
     target_first_result_s: Optional[float] = None
 
     def __post_init__(self):
+        self.nodes = max(1, self.nodes)
+        self.min_wave = max(self.min_wave, self.nodes)
         self.min_wave = max(1, min(self.min_wave, self.n_tasks))
         self.max_wave = max(self.min_wave, min(self.max_wave, self.n_tasks))
         # default start: n/4 rounded down to a power of two, capped at
@@ -113,18 +120,20 @@ class WaveController:
     # -- decisions ---------------------------------------------------------
     def _pick_lanes(self, wave: int) -> int:
         """Largest power-of-two core-level width that divides the wave,
-        keeps the node level at least as wide as the device count, and
-        respects the congestion-adjusted cap.
+        keeps the node level at least as wide as the fabric's parallel
+        width (devices x nodes), and respects the congestion-adjusted cap.
 
-        With a single device there is no node level to shard, so the
-        measured winner is the flat vmap (the nested node/core reshape
-        costs ~25% on CPU XLA for nothing) — lanes stay at 1."""
-        if self.devices <= 1:
+        With a single device on a single host there is no node level to
+        shard, so the measured winner is the flat vmap (the nested
+        node/core reshape costs ~25% on CPU XLA for nothing) — lanes stay
+        at 1."""
+        width = self.devices * self.nodes
+        if width <= 1:
             return 1
         cap = max(1, min(self.lanes_cap, self.max_lanes))
         lanes = 1
         while (lanes * 2 <= cap and wave % (lanes * 2) == 0
-               and wave // (lanes * 2) >= self.devices):
+               and wave // (lanes * 2) >= width):
             lanes *= 2
         return lanes
 

@@ -39,6 +39,7 @@ from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.compile_cache import CompileCache, default_cache
 from repro.core.telemetry import LaunchRecord, Timer
@@ -49,8 +50,30 @@ def _tree_ready(tree: Any) -> bool:
                if hasattr(l, "is_ready"))
 
 
+def concat_outputs(parts: list) -> Any:
+    """Concatenate per-wave (or per-shard) outputs along the task axis —
+    the ONE merge semantics shared by the policy driver's wave concat and
+    the distributed backend's shard assembly."""
+    if len(parts) == 1:
+        return parts[0]
+    if isinstance(parts[0], list):   # serial scheduler: per-task out lists
+        return [o for p in parts for o in p]
+    return jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0),
+        *parts)
+
+
 class WaveHandle:
-    """One in-flight wave: outputs may still be computing on device."""
+    """One in-flight wave: outputs may still be computing on device.
+
+    Failure-aware subclasses (the distributed fabric's composite handle)
+    set ``can_fail = True`` and may return True from ``failed()`` once the
+    wave can no longer complete on its own (a shard is stranded on a dead
+    node). The policy driver treats ``failed()`` as an immediate
+    re-dispatch signal — no outlier threshold — and never hard-blocks on
+    a ``can_fail`` handle it has not seen become ready."""
+
+    can_fail = False          # in-process waves cannot lose a node
 
     def __init__(self, out: Any, rec: LaunchRecord, t0: float):
         self.out = out
@@ -66,6 +89,11 @@ class WaveHandle:
         h._t_first = rec.t_first_result or None
         h._harvested = True
         return h
+
+    def failed(self) -> bool:
+        """True once this wave can NEVER become ready by itself (e.g. its
+        node died). In-process waves always return False."""
+        return False
 
     def poll(self) -> bool:
         """Non-blocking readiness check; notes time-to-first-result."""
@@ -129,6 +157,14 @@ class LaunchBackend(Protocol):
     # Backends whose waves have a node/core hierarchy additionally set
     # ``supports_lane_override = True`` and accept a per-dispatch
     # ``inner_lanes=`` keyword (used by wave autoscaling).
+    #
+    # Multi-host backends (``repro.dist.DistributedBackend``) grow the
+    # protocol upward without changing its surface: ``dispatch`` shards a
+    # wave across nodes and returns a COMPOSITE handle that harvests
+    # per-node sub-results as they land (partial-wave harvest) and turns
+    # ``failed()`` True when a node's heartbeat lease expires mid-wave.
+    # They also advertise ``n_nodes`` (alive-node count) so the wave
+    # controller can size waves to the fabric's width.
 
 
 # ----------------------------------------------------------------------
@@ -210,13 +246,18 @@ class ArrayBackend:
                  task_axis: str = "data",
                  inner_lanes: Optional[int] = None,
                  cache: Optional[CompileCache] = None,
-                 donate: bool = False):
+                 donate: bool = False,
+                 target_first_result_s: Optional[float] = None):
         self.mesh = mesh
         self.task_axis = task_axis
         self.inner_lanes = inner_lanes
         self.cache = cache if cache is not None else default_cache()
         # buffer donation is a no-op (warning) on CPU backends
         self.donate = donate and jax.default_backend() != "cpu"
+        # the user-facing interactivity SLO: a wave controller built over
+        # this backend adopts it as its t_first ceiling, so ONE knob gates
+        # serve-side admission preemption AND launch-side wave sizing
+        self.target_first_result_s = target_first_result_s
         self._warned_lane_fallback = False
 
     # -- general-purpose AOT compile through the shared cache -------------
@@ -322,9 +363,11 @@ class PipelinedBackend(ArrayBackend):
                  inner_lanes: Optional[int] = None,
                  cache: Optional[CompileCache] = None,
                  depth: int = 2,
-                 donate: bool = True):
+                 donate: bool = True,
+                 target_first_result_s: Optional[float] = None):
         super().__init__(mesh=mesh, task_axis=task_axis,
-                         inner_lanes=inner_lanes, cache=cache, donate=donate)
+                         inner_lanes=inner_lanes, cache=cache, donate=donate,
+                         target_first_result_s=target_first_result_s)
         self.max_in_flight = max(1, depth)
 
 
@@ -333,13 +376,13 @@ class PipelinedBackend(ArrayBackend):
 # ----------------------------------------------------------------------
 
 BACKENDS = {"serial": SerialBackend, "array": ArrayBackend,
-            "pipelined": PipelinedBackend}
+            "pipelined": PipelinedBackend, "dist": None}  # dist: lazy
 
 
 def make_backend(kind: str, mesh: Optional[jax.sharding.Mesh] = None,
                  cache: Optional[CompileCache] = None,
                  **kwargs) -> LaunchBackend:
-    """'serial' | 'array' | 'pipelined' -> a ready LaunchBackend.
+    """'serial' | 'array' | 'pipelined' | 'dist' -> a ready LaunchBackend.
 
     For 'serial', ``mesh``/``cache`` are accepted but meaningless (the
     per-instance VM baseline uses neither); any other kwargs are passed
@@ -347,14 +390,18 @@ def make_backend(kind: str, mesh: Optional[jax.sharding.Mesh] = None,
     ``inner_lanes="auto"`` defers the node/core fan-out to the policy
     layer's ``WaveController`` (the backend keeps no static default and
     each wave's lanes arrive via ``dispatch(..., inner_lanes=...)``).
+    'dist' resolves lazily to the multi-host fabric
+    (``repro.dist.DistributedBackend``; pass ``n_nodes=``/``nodes=``).
     """
     if kind == "serial":
         return SerialBackend(**kwargs)
     if kwargs.get("inner_lanes") == "auto":
         kwargs["inner_lanes"] = None     # per-wave override drives fan-out
-    try:
-        cls = BACKENDS[kind]
-    except KeyError:
+    if kind == "dist":
+        from repro.dist.backend import DistributedBackend
+        return DistributedBackend(mesh=mesh, cache=cache, **kwargs)
+    cls = BACKENDS.get(kind)
+    if cls is None:
         raise ValueError(f"unknown backend {kind!r}; "
-                         f"choose from {sorted(BACKENDS)}") from None
+                         f"choose from {sorted(BACKENDS)}")
     return cls(mesh=mesh, cache=cache, **kwargs)

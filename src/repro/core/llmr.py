@@ -33,9 +33,19 @@ so the report still shows both attempts' cost while counting the work
 once. Other in-flight waves keep harvesting the whole time — the old
 driver's synchronous re-run inside the harvest barrier stalled every
 other wave for the full straggler delay.
+
+NODE failure rides the same path: a failure-aware backend (the
+distributed fabric) turns a handle's ``failed()`` True once a node's
+heartbeat lease expires under an in-flight wave. The driver treats that
+as an immediate outlier — no threshold, heartbeat expiry IS the signal —
+and enqueues the same speculative duplicate (over the surviving nodes),
+counted in ``MapReduceReport.node_failures`` and marked
+``redispatch_cause="node_failure"``; the dead attempt keeps its record
+under ``superseded_by_redispatch`` exactly like a lost straggler race.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Union
@@ -44,7 +54,8 @@ import jax
 import numpy as np
 
 from repro.core.autoscale import WaveController, WaveDecision
-from repro.core.backend import LaunchBackend, make_backend
+from repro.core.backend import (LaunchBackend, concat_outputs,
+                                make_backend)
 from repro.core.compile_cache import CompileCache
 from repro.core.telemetry import LaunchRecord, Timer
 
@@ -54,6 +65,7 @@ class MapReduceReport:
     records: List[LaunchRecord] = field(default_factory=list)
     waves: int = 0
     speculative_redispatches: int = 0
+    node_failures: int = 0            # waves re-dispatched off dead nodes
     t_reduce: float = 0.0
     t_total: float = 0.0
     autoscale: List[WaveDecision] = field(default_factory=list)
@@ -85,6 +97,7 @@ class _DelayedHandle:
         self._delay = delay
         self.rec = inner.rec
         self.t0 = inner.t0
+        self.can_fail = getattr(inner, "can_fail", False)
 
     def _elapsed(self) -> float:
         return time.perf_counter() - self.t0
@@ -94,6 +107,9 @@ class _DelayedHandle:
             return False
         return self._inner.poll()
 
+    def failed(self) -> bool:
+        return getattr(self._inner, "failed", lambda: False)()
+
     def result(self) -> tuple:
         remaining = self._delay - self._elapsed()
         if remaining > 0:
@@ -102,6 +118,23 @@ class _DelayedHandle:
 
     def abandon(self):
         return self._inner.abandon()
+
+
+def _accepted_kwargs(factory: Callable, **optional) -> dict:
+    """The subset of ``optional`` (None values dropped) that ``factory``
+    can accept — seed-era controller factories predate ``nodes`` and
+    ``target_first_result_s`` and must keep working unchanged."""
+    optional = {k: v for k, v in optional.items() if v is not None}
+    if not optional:
+        return {}
+    try:
+        params = inspect.signature(factory).parameters.values()
+    except (TypeError, ValueError):
+        return optional
+    if any(p.kind == inspect.Parameter.VAR_KEYWORD for p in params):
+        return optional
+    names = {p.name for p in params}
+    return {k: v for k, v in optional.items() if k in names}
 
 
 @dataclass
@@ -126,16 +159,24 @@ class LLMapReduce:
                  backend: Optional[LaunchBackend] = None,
                  cache: Optional[CompileCache] = None,
                  inner_lanes: Optional[Union[int, str]] = None,
-                 controller: Optional[Callable[..., WaveController]] = None):
+                 controller: Optional[Callable[..., WaveController]] = None,
+                 target_first_result_s: Optional[float] = None):
         """``wave_size`` is an int (fixed waves), ``None`` (one wave), or
         ``"auto"`` — a fresh ``WaveController`` per ``map_reduce`` call
         sizes every wave (and its ``inner_lanes`` fan-out) from measured
         telemetry. ``controller`` overrides the controller factory
-        (signature ``controller(n_tasks=..., devices=...)``).
+        (signature ``controller(n_tasks=..., devices=...)``; keyword
+        arguments the factory does not accept — ``nodes``,
+        ``target_first_result_s`` — are not forced on it).
 
         ``straggler_factor`` and ``min_straggler_s`` gate speculative
         re-dispatch: an in-flight wave is an outlier once its wall clock
-        exceeds ``max(straggler_factor * median, min_straggler_s)``."""
+        exceeds ``max(straggler_factor * median, min_straggler_s)``.
+
+        ``target_first_result_s`` is the interactivity SLO handed to the
+        wave controller; left ``None``, it is inherited from the backend
+        (``backend.target_first_result_s``), which is how the serving
+        CLI's one SLO knob reaches wave sizing end-to-end."""
         self.mesh = mesh
         self.wave_size = wave_size
         self.straggler_factor = straggler_factor
@@ -146,6 +187,9 @@ class LLMapReduce:
                 "cache": cache, "inner_lanes": inner_lanes}
             backend = make_backend(scheduler, mesh=mesh, **kwargs)
         self.backend = backend
+        self.target_first_result_s = (
+            target_first_result_s if target_first_result_s is not None
+            else getattr(backend, "target_first_result_s", None))
         self.sched = backend                 # seed-era alias
         self.scheduler_kind = getattr(backend, "name", scheduler)
 
@@ -179,7 +223,12 @@ class LLMapReduce:
         controller: Optional[WaveController] = None
         if self.wave_size == "auto":
             factory = self.controller_factory or WaveController
-            controller = factory(n_tasks=n, devices=len(jax.devices()))
+            controller = factory(
+                n_tasks=n, devices=len(jax.devices()),
+                **_accepted_kwargs(
+                    factory,
+                    nodes=int(getattr(self.backend, "n_nodes", 1) or 1),
+                    target_first_result_s=self.target_first_result_s))
         wave = n if controller else (self.wave_size or n)
         depth = max(1, getattr(self.backend, "max_in_flight", 1))
         lanes_ok = getattr(self.backend, "supports_lane_override", False)
@@ -235,13 +284,37 @@ class LLMapReduce:
             h.rec.extra["wave"] = slot.wi
             return h
 
-        def speculate(slot: _Slot) -> None:
+        def speculate(slot: _Slot, cause: Optional[str] = None) -> None:
             """Enqueue a speculative duplicate as a second in-flight
             attempt — no barrier, first-ready-wins (idempotent tasks)."""
             t0 = time.perf_counter()
-            slot.attempts.append(redispatch(slot))
+            dup = redispatch(slot)
+            if cause is not None:
+                dup.rec.extra["redispatch_cause"] = cause
+            slot.attempts.append(dup)
             slot.t_attempt.append(t0)
             report.speculative_redispatches += 1
+
+        def live_attempts(slot: _Slot) -> List[int]:
+            """Attempt indices that can still become ready (not stranded
+            on a dead node)."""
+            return [j for j, h in enumerate(slot.attempts)
+                    if not h.failed()]
+
+        def check_failures() -> None:
+            """A wave whose every attempt sits on a dead node can never
+            complete: feed it straight back through the speculative
+            re-dispatch path — no outlier threshold, the heartbeat expiry
+            IS the signal. The dead attempts stay in the race only as
+            records (they will lose and be kept under
+            ``superseded_by_redispatch``)."""
+            for slot in slots:
+                if not all(h.can_fail for h in slot.attempts):
+                    continue
+                if live_attempts(slot):
+                    continue
+                report.node_failures += 1
+                speculate(slot, cause="node_failure")
 
         def check_stragglers() -> None:
             thr = threshold()
@@ -307,6 +380,7 @@ class LLMapReduce:
                         harvest(slot, j)
                         progressed = True
                         break
+            check_failures()
             check_stragglers()
             return progressed
 
@@ -326,16 +400,30 @@ class LLMapReduce:
                 oldest = slots[0]
                 thr = threshold()
                 if thr is None:
-                    harvest(oldest, 0)       # no baseline: plain barrier
+                    # no baseline: plain barrier — but NEVER hard-block a
+                    # failure-aware wave (its node may die under the
+                    # barrier; keep polling so sweep() can detect the
+                    # lease expiry and re-dispatch instead)
+                    if any(h.can_fail for h in oldest.attempts):
+                        time.sleep(min(tick, 1e-3))
+                        tick = min(tick * 2, 2e-3)
+                        continue
+                    harvest(oldest, 0)
                     return
                 now = time.perf_counter()
-                if len(oldest.attempts) == 1:
+                # computed ONCE: a lease can expire between two calls,
+                # and the harvest index below must match this guard
+                live = live_attempts(oldest)
+                if not live:
+                    pass                     # sweep() is re-dispatching it
+                elif len(oldest.attempts) == 1:
                     if now - oldest.t_start > thr:
                         speculate(oldest)    # start the race, keep polling
                 elif now - oldest.t_attempt[-1] > thr:
                     # the duplicate is overdue too: polling cannot decide
-                    # this slot — settle on the re-dispatch
-                    harvest(oldest, len(oldest.attempts) - 1)
+                    # this slot — settle on the newest attempt that can
+                    # still complete
+                    harvest(oldest, live[-1])
                     return
                 # wait the shorter of a poll tick or the time left until
                 # the slot's next escalation point
@@ -363,13 +451,7 @@ class LLMapReduce:
         return result, report
 
 
-def _concat_waves(outs: list) -> Any:
-    if len(outs) == 1:
-        return outs[0]
-    if isinstance(outs[0], list):  # serial scheduler: list of per-task outs
-        return [o for wave in outs for o in wave]
-    return jax.tree_util.tree_map(
-        lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0), *outs)
+_concat_waves = concat_outputs
 
 
 # ----------------------------------------------------------------------

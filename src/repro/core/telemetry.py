@@ -14,6 +14,12 @@ Straggler accounting rides in ``extra`` and is surfaced as CSV columns:
 ``redispatch`` marks the duplicate attempt that won. Wave autoscaling
 decisions (``repro.core.autoscale.WaveController``) land in
 ``extra["autoscale"]`` per wave.
+
+Distributed waves (``repro.dist``) add the top of the tree: ``n_nodes``
+counts the hosts a wave was sharded over and ``node_failure`` marks an
+attempt stranded by a heartbeat-expired node. Per-shard detail lands in
+``extra["node_records"]`` and rolls up via ``LaunchRecord.nodes()`` (one
+wave) and ``nodes_rollup()`` (a whole report).
 """
 from __future__ import annotations
 
@@ -46,6 +52,16 @@ class LaunchRecord:
         return bool(self.extra.get("straggler_redispatch"))
 
     @property
+    def n_nodes(self) -> int:
+        """Hosts this wave was sharded over (1 for single-host backends)."""
+        return int(self.extra.get("n_nodes", 1) or 1)
+
+    @property
+    def node_failure(self) -> bool:
+        """A node lease expired under this attempt (its shard was lost)."""
+        return bool(self.extra.get("node_failure"))
+
+    @property
     def total(self) -> float:
         return self.t_schedule + self.t_stage + self.t_spawn
 
@@ -63,16 +79,44 @@ class LaunchRecord:
             "core": max(self.t_spawn - self.t_first_result, 0.0),
         }
 
+    def nodes(self) -> Dict[str, dict]:
+        """Per-node rollup of this wave's shards ({} for single-host
+        records): node id -> instances, shard span, wall, attempts."""
+        out: Dict[str, dict] = {}
+        for nr in self.extra.get("node_records", []):
+            out[nr["node"]] = {"n": nr.get("n", 0),
+                               "span": (nr.get("lo"), nr.get("hi")),
+                               "t_wave": nr.get("t_wave", 0.0),
+                               "attempts": nr.get("attempts", 1),
+                               "compile_source": nr.get("compile_source")}
+        return out
+
     def row(self) -> str:
         return (f"{self.strategy},{self.n_instances},{self.t_schedule:.4f},"
                 f"{self.t_stage:.4f},{self.t_spawn:.4f},"
                 f"{self.t_first_result:.4f},{self.total:.4f},"
                 f"{self.rate:.2f},{int(self.superseded)},"
-                f"{int(self.redispatch)}")
+                f"{int(self.redispatch)},{self.n_nodes},"
+                f"{int(self.node_failure)}")
 
 
 HEADER = ("strategy,n,t_schedule,t_stage,t_spawn,t_first_result,"
-          "t_total,rate_per_s,superseded,redispatch")
+          "t_total,rate_per_s,superseded,redispatch,n_nodes,node_failure")
+
+
+def nodes_rollup(records: List[LaunchRecord]) -> Dict[str, dict]:
+    """Aggregate the per-node shard detail of many wave records: node id
+    -> waves served, instances, busy seconds — the fabric-level view the
+    ``fig_dist`` benchmark and ``examples/massive_launch.py`` print."""
+    out: Dict[str, dict] = {}
+    for r in records:
+        for nid, d in r.nodes().items():
+            agg = out.setdefault(nid, {"waves": 0, "instances": 0,
+                                       "t_busy": 0.0})
+            agg["waves"] += 1
+            agg["instances"] += d["n"]
+            agg["t_busy"] += d["t_wave"]
+    return out
 
 
 class Timer:

@@ -1,0 +1,28 @@
+"""Distributed launch fabric: the paper's scheduler -> node level.
+
+``repro.dist`` adds the top level of the launch tree that
+``repro.core.backend`` reproduces inside one process: ONE dispatch fans a
+wave out across many NODES (each owning its own device subset, local
+backend, and compile cache), nodes report liveness to a registry, and a
+node lost mid-wave feeds its work back through the policy layer's
+barrier-free speculative re-dispatch.
+
+  ``registry``  NodeRegistry: membership, heartbeat leases,
+                alive/suspect/dead health, elastic join/leave.
+  ``node``      NodeAgent: a worker loop owning a device subset —
+                in-process threads by default (CI needs no cluster),
+                real ``multiprocessing`` workers optionally.
+  ``backend``   DistributedBackend: the ``LaunchBackend`` protocol over
+                the fabric — capacity-weighted wave sharding, composite
+                wave handles with partial-wave harvest, failover.
+"""
+from repro.dist.backend import DistributedBackend, NoAliveNodesError
+from repro.dist.node import NodeAgent, ProcessNodeAgent, spawn_local_nodes
+from repro.dist.registry import (ALIVE, DEAD, LEFT, SUSPECT, NodeInfo,
+                                 NodeRegistry)
+
+__all__ = [
+    "DistributedBackend", "NoAliveNodesError",
+    "NodeAgent", "ProcessNodeAgent", "spawn_local_nodes",
+    "NodeRegistry", "NodeInfo", "ALIVE", "SUSPECT", "DEAD", "LEFT",
+]

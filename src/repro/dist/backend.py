@@ -1,0 +1,376 @@
+"""DistributedBackend: the ``LaunchBackend`` protocol over many nodes.
+
+This is the paper's Fig-4 architecture made real at the top level of the
+launch tree: ONE ``dispatch()`` is one scheduler interaction that fans a
+wave out across every alive node (weighted by capacity), each node fans
+out locally through its own backend (node -> core), and the composite
+``DistWaveHandle`` harvests per-node sub-results as they land — a
+partial-wave harvest, no node ever waits on a sibling.
+
+Failure is a first-class path, layered twice:
+
+  * the HANDLE detects a shard stranded on a node whose heartbeat lease
+    expired (``failed()`` turns True) and, when the caller hard-blocks in
+    ``result()``, fails over just that shard to a surviving node — the
+    completed shards keep their results;
+  * the POLICY layer (``LLMapReduce``) sees ``failed()`` during its
+    non-blocking sweep and feeds the whole wave back through its existing
+    barrier-free speculative re-dispatch — first-ready-wins, the dead
+    attempt's record kept under ``superseded_by_redispatch``. Results
+    stay exactly-once either way: a dead node reports nothing.
+
+Because ``DistributedBackend`` speaks the same protocol as every other
+backend, ``LLMapReduce``, ``WaveController(wave_size="auto")``,
+telemetry, and ``ServeEngine`` run over the fabric with zero API change.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.telemetry import LaunchRecord, Timer
+from repro.core.backend import WaveHandle, concat_outputs
+from repro.dist.node import ShardTask, spawn_local_nodes
+from repro.dist.registry import DEAD, LEFT, NodeInfo, NodeRegistry
+
+
+class NoAliveNodesError(RuntimeError):
+    """Every node of the fabric is dead or gone: a wave cannot be placed.
+    Raised instead of hanging — the caller decides whether to wait for an
+    elastic join or give up."""
+
+
+def _slice_tree(chunk: Any, lo: int, hi: int) -> Any:
+    return jax.tree_util.tree_map(lambda x: x[lo:hi], chunk)
+
+
+def split_by_capacity(n: int, capacities: List[int]) -> List[int]:
+    """Largest-remainder split of ``n`` tasks over capacity weights —
+    sizes sum to exactly ``n``; zero-sized shards are legal (a wave
+    smaller than the fleet skips the lightest nodes)."""
+    total = sum(capacities)
+    if total <= 0:
+        raise ValueError("total capacity must be positive")
+    exact = [n * c / total for c in capacities]
+    sizes = [int(e) for e in exact]
+    # hand out the remainder by largest fractional part (stable on ties)
+    order = sorted(range(len(exact)), key=lambda i: exact[i] - sizes[i],
+                   reverse=True)
+    for i in order[:n - sum(sizes)]:
+        sizes[i] += 1
+    return sizes
+
+
+@dataclass
+class _Shard:
+    """One node's slice of one wave."""
+    node_id: str
+    lo: int
+    hi: int
+    chunk: Any
+    task: ShardTask
+    t_submit: float
+    attempts: int = 1
+    done: bool = False
+    failed: bool = False
+    out: Any = None
+    rec: Optional[LaunchRecord] = None
+    t_done: float = 0.0
+    history: List[str] = field(default_factory=list)  # nodes tried
+
+
+class DistWaveHandle(WaveHandle):
+    """Composite handle over per-node shards: partial-wave harvest,
+    dead-node detection (``failed()``), shard-level failover in
+    ``result()``."""
+
+    can_fail = True          # the policy layer may see failed() turn True
+
+    def __init__(self, fabric: "DistributedBackend", fn: Callable,
+                 shards: List[_Shard], rec: LaunchRecord, t0: float,
+                 inner_lanes: Optional[int] = None):
+        super().__init__(out=None, rec=rec, t0=t0)
+        self.fabric = fabric
+        self.fn = fn
+        self.shards = shards
+        self.inner_lanes = inner_lanes
+        self._last_refresh = 0.0
+
+    # -- liveness ----------------------------------------------------------
+    def _refresh(self) -> None:
+        """Harvest every completed shard (partial-wave harvest) and mark
+        shards stranded on dead nodes. A shard error (the task itself
+        raised) propagates — re-running a broken program elsewhere would
+        only fail again."""
+        pending = [s for s in self.shards if not s.done and not s.failed]
+        if not pending:
+            return
+        # throttle: the driver polls, failure-checks, and live-checks the
+        # same handle within one sub-millisecond tick — one scan serves
+        # them all (shard state only changes at node/heartbeat cadence)
+        now = time.perf_counter()
+        if now - self._last_refresh < 1e-3:
+            return
+        self._last_refresh = now
+        states: Optional[Dict[str, str]] = None
+        for s in pending:
+            if s.task.ready:
+                if s.task.err is not None:
+                    raise s.task.err
+                s.out, s.rec = s.task.out, s.task.rec
+                s.done = True
+                s.t_done = time.perf_counter()
+                if self._t_first is None:
+                    self._t_first = s.t_done - self.t0
+                continue
+            if states is None:        # ONE sweep per refresh, not per node
+                states = self.fabric.registry.states()
+            # DEAD = lease expired; LEFT with an undelivered shard means
+            # the node crashed mid-drain — either way, nobody will deliver
+            if states.get(s.node_id, DEAD) in (DEAD, LEFT):
+                s.failed = True
+                self.rec.extra["node_failure"] = True
+                self.rec.extra.setdefault("failed_nodes", []).append(
+                    s.node_id)
+
+    def failed(self) -> bool:
+        if self._harvested:
+            return False
+        self._refresh()
+        return any(s.failed for s in self.shards if not s.done)
+
+    # -- harvest -----------------------------------------------------------
+    def poll(self) -> bool:
+        if self._harvested:
+            return True
+        self._refresh()
+        if all(s.done for s in self.shards):
+            self._finalize()
+            return True
+        return False
+
+    def _finalize(self) -> None:
+        self.out = concat_outputs(
+            [s.out for s in sorted(self.shards, key=lambda s: s.lo)])
+        now = time.perf_counter()
+        self.rec.t_spawn = now - self.t0
+        self.rec.t_first_result = (self._t_first if self._t_first is not None
+                                   else self.rec.t_spawn)
+        self.rec.extra["node_records"] = [
+            {"node": s.node_id, "n": s.hi - s.lo, "lo": s.lo, "hi": s.hi,
+             "t_wave": s.t_done - s.t_submit, "attempts": s.attempts,
+             "t_schedule": s.rec.t_schedule if s.rec else 0.0,
+             "compile_source": (s.rec.extra.get("compile_source")
+                                if s.rec else None)}
+            for s in self.shards]
+        # wave-level compile source = the slowest tier any node paid
+        sources = {nr["compile_source"]
+                   for nr in self.rec.extra["node_records"]}
+        for tier in ("compiled", "disk", "memory"):
+            if tier in sources:
+                self.rec.extra["compile_source"] = tier
+                break
+        self._harvested = True
+
+    def failover(self) -> int:
+        """Resubmit every failed shard to a surviving node; completed
+        shards keep their results. Returns the number of shards moved;
+        raises ``NoAliveNodesError`` when nobody is left to take them."""
+        moved = 0
+        for s in self.shards:
+            if s.done or not s.failed:
+                continue
+            s.history.append(s.node_id)
+            target = self.fabric.pick_node(exclude=s.history)
+            s.task.cancel()
+            s.task = self.fabric.submit_shard(
+                target, self.fn, s.chunk, s.hi - s.lo, self.inner_lanes)
+            s.node_id = target.node_id
+            s.t_submit = time.perf_counter()
+            s.failed = False
+            s.attempts += 1
+            moved += 1
+            self.rec.extra.setdefault("failover", []).append(
+                {"span": (s.lo, s.hi), "from": s.history[-1],
+                 "to": target.node_id, "attempt": s.attempts})
+        return moved
+
+    def result(self) -> tuple:
+        """Block until the wave completes, failing stranded shards over to
+        surviving nodes as leases expire (standalone callers get recovery
+        even without the policy layer's re-dispatch)."""
+        while not self.poll():
+            if self.failed():
+                self.failover()
+            time.sleep(5e-4)
+        return self.out, self.rec
+
+    def abandon(self):
+        for s in self.shards:
+            if not s.done:
+                s.task.cancel()
+        return super().abandon()
+
+
+class DistributedBackend:
+    """Capacity-weighted wave sharding across registry-tracked nodes."""
+
+    name = "llmr-dist"
+    supports_lane_override = True
+
+    def __init__(self,
+                 nodes: Optional[List[Any]] = None,
+                 n_nodes: Optional[int] = None,
+                 registry: Optional[NodeRegistry] = None,
+                 cache: Optional[Any] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 node_backend: str = "array",
+                 node_mode: str = "thread",
+                 capacities: Optional[List[int]] = None,
+                 depth: int = 2,
+                 heartbeat_timeout_s: float = 0.5,
+                 heartbeat_s: Optional[float] = None,
+                 inner_lanes: Optional[int] = None,
+                 target_first_result_s: Optional[float] = None):
+        """Pass ready ``nodes`` (agents already registered with
+        ``registry``) or let the backend spawn ``n_nodes`` local agents
+        (thread mode by default; ``node_mode="process"`` for real
+        multiprocessing workers). ``cache=None`` gives every spawned node
+        its OWN ``CompileCache`` (the paper's node-local staging disk); an
+        explicit cache is shared by all thread nodes.
+        ``target_first_result_s`` rides along to any wave controller
+        built over this backend (the serve-side SLO knob)."""
+        from repro.core.compile_cache import default_cache
+        self.mesh = mesh                      # accepted for factory symmetry
+        # driver-side cache: serve engines (and anything else calling
+        # backend.compile) compile and execute locally on the driver —
+        # only WAVES are distributed
+        self.cache = cache if cache is not None else default_cache()
+        self.registry = registry if registry is not None else NodeRegistry(
+            heartbeat_timeout_s=heartbeat_timeout_s)
+        self.inner_lanes = inner_lanes
+        self.target_first_result_s = target_first_result_s
+        self.max_in_flight = max(1, depth)
+        self._owned: List[Any] = []
+        self._rr = 0
+        if nodes is None:
+            kw: dict = {"backend_kind": node_backend}
+            if heartbeat_s is not None:
+                kw["heartbeat_s"] = heartbeat_s
+            if cache is not None:
+                if node_mode == "thread":
+                    kw["cache"] = cache      # shared in-process cache
+                else:
+                    # process nodes can't share a Python object, but the
+                    # DISK tier is multi-process safe by design: point
+                    # every node at the caller's directory (max_bytes
+                    # stays a driver-side policy)
+                    kw["cache_dir"] = cache.cache_dir
+            nodes = spawn_local_nodes(n_nodes or 2, self.registry,
+                                      mode=node_mode, capacities=capacities,
+                                      **kw)
+            self._owned = list(nodes)
+        self.agents: Dict[str, Any] = {a.node_id: a for a in nodes}
+
+    # -- fleet -------------------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        """Alive-node count (the wave controller's node-level width)."""
+        return max(1, len(self._alive()))
+
+    def add_node(self, agent: Any) -> None:
+        """Elastic join: an agent that registered itself starts receiving
+        waves at the very next ``dispatch``."""
+        self.agents[agent.node_id] = agent
+
+    def _alive(self) -> List[NodeInfo]:
+        """Dispatch pool: strictly-alive nodes, falling back to suspects
+        when none are (a beat missed under load is not a dead node; only
+        an expired lease removes a node from placement)."""
+        pool = [i for i in self.registry.alive()
+                if i.node_id in self.agents]
+        if not pool:
+            pool = [i for i in self.registry.usable()
+                    if i.node_id in self.agents]
+        return pool
+
+    def pick_node(self, exclude: Optional[List[str]] = None) -> NodeInfo:
+        """Round-robin over alive nodes (failover placement), preferring
+        nodes that have not already failed this shard."""
+        alive = self._alive()
+        if not alive:
+            raise NoAliveNodesError(
+                "no alive nodes in the fabric "
+                f"(registry: {self.registry.rollup()})")
+        fresh = [i for i in alive if i.node_id not in (exclude or ())]
+        pool = fresh or alive
+        self._rr += 1
+        return pool[self._rr % len(pool)]
+
+    def submit_shard(self, info: NodeInfo, fn: Callable, chunk: Any,
+                     n: int, inner_lanes: Optional[int]) -> ShardTask:
+        self.registry.record_dispatch(info.node_id, n)
+        return self.agents[info.node_id].submit(fn, chunk, n,
+                                                inner_lanes=inner_lanes)
+
+    # -- LaunchBackend -----------------------------------------------------
+    def compile(self, fn: Callable, example_args: tuple,
+                extras: tuple = (), donate_argnums: tuple = ()) -> tuple:
+        """(compiled, source) through the driver-side cache — the same
+        entry point ``ArrayBackend`` exposes, so ``ServeEngine`` (which
+        compiles and steps locally) runs over the fabric unchanged."""
+        return self.cache.compile(fn, example_args, mesh=self.mesh,
+                                  donate_argnums=donate_argnums,
+                                  extras=extras)
+
+    def dispatch(self, fn: Callable, chunk: Any, n: int,
+                 inner_lanes: Optional[int] = None) -> DistWaveHandle:
+        """ONE scheduler interaction: shard the wave over every alive node
+        weighted by capacity and enqueue all shards; returns immediately
+        with a composite handle (sub-results are futures on their nodes)."""
+        lanes = self.inner_lanes if inner_lanes is None else inner_lanes
+        rec = LaunchRecord(self.name, n)
+        t = Timer()
+        infos = self._alive()
+        if not infos:
+            raise NoAliveNodesError(
+                "dispatch with no alive nodes "
+                f"(registry: {self.registry.rollup()})")
+        sizes = split_by_capacity(n, [i.capacity for i in infos])
+        shards: List[_Shard] = []
+        lo = 0
+        for info, w in zip(infos, sizes):
+            if w == 0:
+                continue
+            sub = _slice_tree(chunk, lo, lo + w)
+            task = self.submit_shard(info, fn, sub, w, lanes)
+            shards.append(_Shard(info.node_id, lo, lo + w, sub, task,
+                                 time.perf_counter()))
+            lo += w
+        rec.t_schedule = t.lap()
+        rec.fanout = {"sched": 1, "node": len(shards), "core": lanes or 1}
+        rec.extra["n_nodes"] = len(shards)
+        rec.extra["shards"] = [{"node": s.node_id, "lo": s.lo, "hi": s.hi}
+                               for s in shards]
+        return DistWaveHandle(self, fn, shards, rec, time.perf_counter(),
+                              inner_lanes=lanes)
+
+    def launch(self, fn: Callable, inputs: Any, n: int) -> tuple:
+        return self.dispatch(fn, inputs, n).result()
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Gracefully stop every agent this backend spawned (externally
+        provided nodes are the caller's to stop)."""
+        for agent in self._owned:
+            if agent.alive:
+                agent.stop()
+
+    def __enter__(self) -> "DistributedBackend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

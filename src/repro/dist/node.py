@@ -1,0 +1,421 @@
+"""NodeAgent: one node of the launch fabric — a worker loop that owns a
+device subset, runs its own local ``LaunchBackend`` over a per-node
+``CompileCache``, and reports liveness to the ``NodeRegistry``.
+
+Two host models share one interface (``submit / kill / stop``):
+
+  ``NodeAgent``         in-process threads (the CI default): a heartbeat
+                        thread renews the registry lease while a worker
+                        thread drains the node's shard queue through its
+                        local backend. Multi-host is SIMULATED — nodes
+                        share the machine but nothing else (own backend,
+                        own cache, own queue, own lease), which is exactly
+                        the contract the distributed backend and the
+                        policy layer program against.
+  ``ProcessNodeAgent``  real ``multiprocessing`` workers (spawn): each
+                        node is a separate Python process with its own
+                        JAX runtime — heartbeats and results travel over
+                        queues, and ``kill()`` is a hard SIGTERM, so a
+                        lost node is indistinguishable from a crashed
+                        host. Combine with
+                        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+                        to give every node process a fake-device mesh.
+
+Death semantics are the point: ``kill()`` models a crashed node — the
+heartbeat stops, queued shards never run, and a shard computed but not
+yet reported is dropped (the fabric must recover it via re-dispatch, and
+does: results stay exactly-once because a dead node reports nothing).
+``stop()`` is the graceful leave — drain the queue, deregister, exit.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+from repro.dist.registry import NodeRegistry
+
+
+def _node_cache_dir(node_id: str) -> str:
+    """Per-node compile-cache dir: each node keeps its own AOT spill tier
+    (on a real cluster this is node-local disk), under the shared base so
+    hermetic test environments stay hermetic."""
+    base = os.environ.get(
+        "REPRO_COMPILE_CACHE_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro-aot"))
+    return os.path.join(base, "nodes", node_id)
+
+
+class ShardTask:
+    """One shard of one wave, in flight on one node."""
+
+    _ids = itertools.count()
+
+    def __init__(self, fn: Callable, chunk: Any, n: int,
+                 inner_lanes: Optional[int] = None):
+        self.task_id = next(self._ids)
+        self.fn = fn
+        self.chunk = chunk
+        self.n = n
+        self.inner_lanes = inner_lanes
+        self.cancelled = False
+        self.out: Any = None
+        self.rec: Any = None
+        self.err: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    @property
+    def ready(self) -> bool:
+        return self._done.is_set()
+
+    def set_result(self, out: Any, rec: Any) -> None:
+        self.out, self.rec = out, rec
+        self._done.set()
+
+    def set_error(self, err: BaseException) -> None:
+        self.err = err
+        self._done.set()
+
+    def cancel(self) -> None:
+        """Best-effort: a not-yet-started shard is skipped by the worker;
+        a running one completes but nobody reads it (tasks are idempotent)."""
+        self.cancelled = True
+
+
+def _lane_kwargs(backend, n: int, inner_lanes: Optional[int]) -> dict:
+    """Pass the wave's lane plan through to the node's backend only when
+    it supports the override and the shard divides — an indivisible shard
+    silently running the flat plan beats a warning per shard."""
+    if (inner_lanes and inner_lanes > 1 and n % inner_lanes == 0
+            and getattr(backend, "supports_lane_override", False)):
+        return {"inner_lanes": inner_lanes}
+    return {}
+
+
+class NodeAgent:
+    """Thread-hosted node: heartbeat loop + shard-queue worker loop."""
+
+    def __init__(self, node_id: str, registry: NodeRegistry,
+                 capacity: int = 1,
+                 backend: Optional[Any] = None,
+                 backend_kind: str = "array",
+                 cache: Optional[Any] = None,
+                 devices: Optional[list] = None,
+                 heartbeat_s: float = 0.02,
+                 start: bool = True):
+        # local imports: a NodeAgent is constructible before jax config
+        # (mirrors a node booting before it joins the mesh)
+        from repro.core.backend import make_backend
+        from repro.core.compile_cache import CompileCache
+
+        self.node_id = node_id
+        self.registry = registry
+        self.capacity = capacity
+        self.heartbeat_s = heartbeat_s
+        self.devices = devices
+        if backend is None:
+            mesh = None
+            if devices and len(devices) > 1:
+                import jax
+                mesh = jax.sharding.Mesh(np.asarray(devices), ("data",))
+            backend = make_backend(
+                backend_kind, mesh=mesh,
+                cache=cache if cache is not None
+                else CompileCache(cache_dir=_node_cache_dir(node_id)))
+        self.backend = backend
+        self._q: "queue.Queue[ShardTask]" = queue.Queue()
+        self._killed = False
+        self._stopping = False
+        self._paused = False
+        self._threads: List[threading.Thread] = []
+        if start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "NodeAgent":
+        self.registry.register(self.node_id, self.capacity)
+        for target in (self._hb_loop, self._work_loop):
+            t = threading.Thread(target=target, daemon=True,
+                                 name=f"node-{self.node_id}-{target.__name__}")
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def kill(self) -> None:
+        """Abrupt node death: heartbeats stop NOW, queued shards never
+        run, an in-flight shard's result is dropped. Detection is the
+        registry's job (lease expiry), not ours — dead nodes don't
+        announce themselves."""
+        self._killed = True
+
+    def stop(self, timeout: float = 5.0) -> None:
+        """Graceful leave: drain the queue, deregister, exit."""
+        self._stopping = True
+        for t in self._threads:
+            t.join(timeout)
+
+    def pause(self) -> None:
+        """Stop taking work while still heartbeating — a wedged-but-alive
+        node (test/bench affordance: makes kill-mid-wave deterministic)."""
+        self._paused = True
+
+    def resume(self) -> None:
+        self._paused = False
+
+    @property
+    def alive(self) -> bool:
+        return not self._killed and not self._stopping
+
+    # -- work ---------------------------------------------------------------
+    def submit(self, fn: Callable, chunk: Any, n: int,
+               inner_lanes: Optional[int] = None) -> ShardTask:
+        task = ShardTask(fn, chunk, n, inner_lanes)
+        self._q.put(task)
+        return task
+
+    def _hb_loop(self) -> None:
+        while not self._killed:
+            # a graceful leave keeps beating until the worker has DRAINED
+            # (unfinished_tasks covers the task the worker already popped:
+            # a long final shard must not expire the lease — deregister is
+            # never a failure)
+            if self._stopping and self._q.unfinished_tasks == 0:
+                return
+            self.registry.heartbeat(self.node_id)
+            time.sleep(self.heartbeat_s)
+
+    def _work_loop(self) -> None:
+        while not self._killed:
+            if self._paused:
+                time.sleep(self.heartbeat_s / 2)
+                continue
+            try:
+                task = self._q.get(timeout=self.heartbeat_s)
+            except queue.Empty:
+                if self._stopping:
+                    break
+                continue
+            try:
+                if task.cancelled or self._killed:
+                    continue
+                try:
+                    kw = _lane_kwargs(self.backend, task.n,
+                                      task.inner_lanes)
+                    out, rec = self.backend.dispatch(
+                        task.fn, task.chunk, task.n, **kw).result()
+                    if self._killed:    # died mid-compute: result is lost
+                        return
+                    rec.extra["node_id"] = self.node_id
+                    task.set_result(out, rec)
+                except BaseException as e:  # noqa: BLE001 — reported
+                    if self._killed:
+                        return
+                    task.set_error(e)
+            finally:
+                self._q.task_done()
+        if self._stopping and not self._killed:
+            self.registry.deregister(self.node_id)
+
+
+# ----------------------------------------------------------------------
+# Process-hosted nodes (real multiprocessing workers)
+# ----------------------------------------------------------------------
+
+def _process_worker_main(node_id: str, task_q, result_q, hb_q,
+                         heartbeat_s: float, backend_kind: str,
+                         cache_dir: str) -> None:
+    """Entry point of a node process: own JAX runtime, own compile cache.
+    Protocol: task_q items are (task_id, fn, chunk, n, inner_lanes) or
+    None (graceful stop); result_q items are (task_id, "ok", out, rec) or
+    (task_id, "err", repr)."""
+    stop = threading.Event()
+
+    def hb() -> None:
+        while not stop.is_set():
+            hb_q.put(node_id)
+            time.sleep(heartbeat_s)
+
+    # beat BEFORE the heavy imports: booting is not being dead (the parent
+    # additionally bridges the spawn bootstrap with a boot-grace beat)
+    threading.Thread(target=hb, daemon=True).start()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+    import jax  # noqa: F401  (fresh runtime in this process)
+
+    from repro.core.backend import make_backend
+    from repro.core.compile_cache import CompileCache
+
+    backend = make_backend(backend_kind,
+                           cache=CompileCache(cache_dir=cache_dir))
+    try:
+        while True:
+            item = task_q.get()
+            if item is None:
+                return
+            task_id, fn, chunk, n, inner_lanes = item
+            try:
+                kw = _lane_kwargs(backend, n, inner_lanes)
+                out, rec = backend.dispatch(fn, chunk, n, **kw).result()
+                rec.extra["node_id"] = node_id
+                out = jax.tree_util.tree_map(np.asarray, out)
+                result_q.put((task_id, "ok", out, rec))
+            except BaseException as e:  # noqa: BLE001
+                result_q.put((task_id, "err", repr(e)))
+    finally:
+        stop.set()
+
+
+class ProcessNodeAgent:
+    """A node hosted in its own Python process (``multiprocessing`` spawn):
+    a separate JAX runtime whose death is a real process death. Same
+    interface as ``NodeAgent``; shard functions must be picklable
+    (module-level), as anything crossing host boundaries must be."""
+
+    def __init__(self, node_id: str, registry: NodeRegistry,
+                 capacity: int = 1,
+                 backend_kind: str = "array",
+                 cache_dir: Optional[str] = None,
+                 heartbeat_s: float = 0.05,
+                 start: bool = True):
+        import multiprocessing as mp
+        ctx = mp.get_context("spawn")
+        self.node_id = node_id
+        self.registry = registry
+        self.capacity = capacity
+        self.heartbeat_s = heartbeat_s
+        self._task_q = ctx.Queue()
+        self._result_q = ctx.Queue()
+        self._hb_q = ctx.Queue()
+        self._pending: dict = {}
+        self._lock = threading.Lock()
+        self._killed = False
+        self._stopping = False
+        self._proc = ctx.Process(
+            target=_process_worker_main,
+            args=(node_id, self._task_q, self._result_q, self._hb_q,
+                  heartbeat_s, backend_kind,
+                  cache_dir or _node_cache_dir(node_id)),
+            daemon=True)
+        if start:
+            self.start()
+
+    def start(self) -> "ProcessNodeAgent":
+        self.registry.register(self.node_id, self.capacity)
+        self._proc.start()
+        for target in (self._pump_heartbeats, self._pump_results):
+            threading.Thread(target=target, daemon=True,
+                             name=f"node-{self.node_id}-{target.__name__}"
+                             ).start()
+        return self
+
+    def submit(self, fn: Callable, chunk: Any, n: int,
+               inner_lanes: Optional[int] = None) -> ShardTask:
+        task = ShardTask(fn, chunk, n, inner_lanes)
+        with self._lock:
+            self._pending[task.task_id] = task
+        import jax
+        chunk = jax.tree_util.tree_map(np.asarray, chunk)  # picklable
+        self._task_q.put((task.task_id, fn, chunk, n, inner_lanes))
+        return task
+
+    def kill(self) -> None:
+        """Hard node death: SIGTERM the process; in-flight work is lost."""
+        self._killed = True
+        if self._proc.is_alive():
+            self._proc.terminate()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stopping = True
+        try:
+            self._task_q.put(None)
+            self._proc.join(timeout)
+        finally:
+            self.registry.deregister(self.node_id)
+
+    @property
+    def alive(self) -> bool:
+        return not self._killed and not self._stopping \
+            and self._proc.is_alive()
+
+    def _pump_heartbeats(self) -> None:
+        booted = False
+        while not self._killed:
+            # keep relaying beats through a graceful stop until the child
+            # has delivered every pending result (drain != death)
+            if self._stopping and not self._pending:
+                return
+            try:
+                node_id = self._hb_q.get(timeout=self.heartbeat_s)
+                booted = True
+            except queue.Empty:
+                # boot grace: the spawn bootstrap (python + jax import in
+                # the child) outlives short leases — the parent vouches
+                # for a LIVE process it can see until the child's own
+                # beats start flowing
+                if not booted and not self._killed and self._proc.is_alive():
+                    self.registry.heartbeat(self.node_id)
+                continue
+            if not self._killed:
+                self.registry.heartbeat(node_id)
+
+    def _pump_results(self) -> None:
+        while not self._killed:
+            try:
+                item = self._result_q.get(timeout=self.heartbeat_s)
+            except queue.Empty:
+                # on a graceful stop, keep draining while the child still
+                # owes results AND can still deliver them — returning on
+                # the first empty poll would drop an in-flight result and
+                # leave its shard waiting forever
+                if self._stopping and (not self._pending
+                                       or not self._proc.is_alive()):
+                    return
+                continue
+            task_id, status, *payload = item
+            with self._lock:
+                task = self._pending.pop(task_id, None)
+            if task is None or self._killed:
+                continue
+            if status == "ok":
+                task.set_result(payload[0], payload[1])
+            else:
+                task.set_error(RuntimeError(
+                    f"node {self.node_id} shard failed: {payload[0]}"))
+
+
+def spawn_local_nodes(n_nodes: int, registry: NodeRegistry,
+                      mode: str = "thread",
+                      capacities: Optional[List[int]] = None,
+                      name_prefix: str = "node",
+                      **agent_kwargs) -> List[Any]:
+    """Spin up ``n_nodes`` local node agents (simulated multi-host).
+    ``mode`` is "thread" (default; shared process, isolated state) or
+    "process" (real ``multiprocessing`` workers). With N fake XLA host
+    devices (``--xla_force_host_platform_device_count=N``), thread nodes
+    partition ``jax.devices()`` round-robin so each node owns a distinct
+    device subset."""
+    caps = capacities or [1] * n_nodes
+    if len(caps) != n_nodes:
+        raise ValueError(f"capacities has {len(caps)} entries "
+                         f"for {n_nodes} nodes")
+    if mode == "process":
+        return [ProcessNodeAgent(f"{name_prefix}{i}", registry,
+                                 capacity=caps[i], **agent_kwargs)
+                for i in range(n_nodes)]
+    if mode != "thread":
+        raise ValueError(f"unknown node mode {mode!r}; "
+                         f"choose 'thread' or 'process'")
+    import jax
+    devs = jax.devices()
+    agents = []
+    for i in range(n_nodes):
+        subset = devs[i::n_nodes] if len(devs) >= n_nodes else None
+        agents.append(NodeAgent(f"{name_prefix}{i}", registry,
+                                capacity=caps[i], devices=subset,
+                                **agent_kwargs))
+    return agents

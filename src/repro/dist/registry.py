@@ -1,0 +1,197 @@
+"""Node registry: membership, heartbeat leases, and health state.
+
+The paper's launch tree assumes the scheduler KNOWS its nodes: an array
+job is fanned over the nodes the scheduler believes are up, and a node
+that stops answering is drained and its work re-queued. ``NodeRegistry``
+is that knowledge for the distributed backend:
+
+  * ``register`` admits a node with a capacity weight (its share of every
+    wave); registering an existing id revives it — elastic join is just
+    register-at-any-time, and the very next wave includes the newcomer;
+  * ``heartbeat`` renews the node's lease. Staleness is computed by the
+    SAME ``HeartbeatDetector`` that drives ``resilient_train`` restarts
+    (``repro.runtime.fault``) — one liveness clock for the whole repo;
+  * health is three-state: ``alive`` -> ``suspect`` (no beat for
+    ``suspect_frac * heartbeat_timeout_s``; excluded from NEW waves but
+    not yet condemned) -> ``dead`` (lease expired; in-flight waves on it
+    are failed and re-dispatched by the backend/policy layers). A suspect
+    node that beats again recovers to alive; a dead node must re-register
+    (its lease is gone — late beats from a zombie are ignored);
+  * ``deregister`` is the graceful leave: the node drains and stops
+    receiving waves without ever counting as a failure.
+
+The registry is pure bookkeeping — it never touches work queues. Who gets
+which shard is the ``DistributedBackend``'s job; what happens to a dead
+node's shard is the policy layer's (``LLMapReduce``) job.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.runtime.fault import HeartbeatDetector
+
+ALIVE = "alive"
+SUSPECT = "suspect"
+DEAD = "dead"
+LEFT = "left"
+
+
+@dataclass
+class NodeInfo:
+    """One registered node's lease + accounting."""
+    node_id: str
+    capacity: int = 1                 # weight in the wave shard split
+    registered_at: float = 0.0
+    state: str = ALIVE
+    waves: int = 0                    # shards dispatched to this node
+    instances: int = 0                # tasks dispatched to this node
+    failures: int = 0                 # times this id's lease expired
+    extra: dict = field(default_factory=dict)
+
+
+class NodeRegistry:
+    """Register/heartbeat/lease-expiry with alive/suspect/dead health."""
+
+    def __init__(self, heartbeat_timeout_s: float = 0.5,
+                 suspect_frac: float = 0.5,
+                 clock: Callable[[], float] = time.monotonic):
+        if not 0.0 < suspect_frac <= 1.0:
+            raise ValueError(f"suspect_frac must be in (0, 1], "
+                             f"got {suspect_frac}")
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.suspect_after_s = suspect_frac * heartbeat_timeout_s
+        self.clock = clock
+        self.detector = HeartbeatDetector(timeout_s=heartbeat_timeout_s,
+                                          clock=clock)
+        self.nodes: Dict[str, NodeInfo] = {}
+        self._lock = threading.RLock()
+        # rate limit: pollers call sweep() thousands of times a second,
+        # but health can only change at heartbeat granularity — a sweep
+        # within 1/20 of the lease of the previous one is a no-op (the
+        # added detection latency is negligible against the lease itself)
+        self._sweep_interval_s = heartbeat_timeout_s / 20.0
+        self._last_sweep = float("-inf")
+
+    # -- membership --------------------------------------------------------
+    def register(self, node_id: str, capacity: int = 1) -> NodeInfo:
+        """Admit (or revive) a node. Idempotent: a re-register refreshes
+        the lease and capacity — this IS the elastic-join path."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        now = self.clock()
+        with self._lock:
+            info = self.nodes.get(node_id)
+            if info is None:
+                info = NodeInfo(node_id, capacity, registered_at=now)
+                self.nodes[node_id] = info
+            info.capacity = capacity
+            info.state = ALIVE
+            self.detector.beat(node_id, now=now)
+            return info
+
+    def deregister(self, node_id: str) -> None:
+        """Graceful leave: the node stops receiving waves; not a failure."""
+        with self._lock:
+            info = self.nodes.get(node_id)
+            if info is not None:
+                info.state = LEFT
+            self.detector.forget(node_id)
+
+    def heartbeat(self, node_id: str) -> bool:
+        """Renew the lease. Returns False (beat ignored) for unknown,
+        left, or already-condemned nodes — a zombie whose lease expired
+        must ``register`` again, it cannot quietly resurrect while the
+        fabric is re-dispatching its work."""
+        with self._lock:
+            info = self.nodes.get(node_id)
+            if info is None or info.state in (DEAD, LEFT):
+                return False
+            self.detector.beat(node_id)
+            if info.state == SUSPECT:
+                info.state = ALIVE
+            return True
+
+    # -- health ------------------------------------------------------------
+    def sweep(self, now: Optional[float] = None) -> Dict[str, str]:
+        """Advance health states from heartbeat ages; returns the
+        transitions applied ({node_id: new_state}). Rate-limited: calls
+        within ``_sweep_interval_s`` of the previous sweep return {}
+        without touching the lock-held node table."""
+        now = self.clock() if now is None else now
+        if now - self._last_sweep < self._sweep_interval_s:
+            return {}
+        moved: Dict[str, str] = {}
+        with self._lock:
+            self._last_sweep = now
+            for info in self.nodes.values():
+                if info.state in (DEAD, LEFT):
+                    continue
+                age = self.detector.age(info.node_id, now=now)
+                if age > self.heartbeat_timeout_s:
+                    info.state = DEAD
+                    info.failures += 1
+                    self.detector.forget(info.node_id)
+                    moved[info.node_id] = DEAD
+                elif age > self.suspect_after_s:
+                    if info.state != SUSPECT:
+                        moved[info.node_id] = SUSPECT
+                    info.state = SUSPECT
+                elif info.state != ALIVE:
+                    info.state = ALIVE
+                    moved[info.node_id] = ALIVE
+        return moved
+
+    def state(self, node_id: str) -> str:
+        """Current health of a node; unknown ids read as dead."""
+        self.sweep()
+        with self._lock:
+            info = self.nodes.get(node_id)
+            return DEAD if info is None else info.state
+
+    def states(self) -> Dict[str, str]:
+        """One sweep, one snapshot of every node's health — the cheap
+        form for callers checking many nodes per poll tick."""
+        self.sweep()
+        with self._lock:
+            return {nid: i.state for nid, i in self.nodes.items()}
+
+    def is_dead(self, node_id: str) -> bool:
+        return self.state(node_id) == DEAD
+
+    def alive(self, now: Optional[float] = None) -> List[NodeInfo]:
+        """Nodes eligible for NEW waves (strictly alive — suspects keep
+        their in-flight work but receive nothing new until they beat)."""
+        self.sweep(now)
+        with self._lock:
+            return [i for i in self.nodes.values() if i.state == ALIVE]
+
+    def usable(self, now: Optional[float] = None) -> List[NodeInfo]:
+        """Alive AND suspect nodes: the dispatch fallback pool. A suspect
+        has merely missed a beat (scheduling hiccup, load) — only a DEAD
+        node's lease is actually gone, so when no node is strictly alive
+        the fabric places waves on suspects rather than failing a launch
+        that could still complete."""
+        self.sweep(now)
+        with self._lock:
+            return [i for i in self.nodes.values()
+                    if i.state in (ALIVE, SUSPECT)]
+
+    # -- accounting ---------------------------------------------------------
+    def record_dispatch(self, node_id: str, n_instances: int) -> None:
+        with self._lock:
+            info = self.nodes.get(node_id)
+            if info is not None:
+                info.waves += 1
+                info.instances += n_instances
+
+    def rollup(self) -> Dict[str, dict]:
+        """Per-node summary (state, capacity, dispatched work, failures)."""
+        self.sweep()
+        with self._lock:
+            return {i.node_id: {"state": i.state, "capacity": i.capacity,
+                                "waves": i.waves, "instances": i.instances,
+                                "failures": i.failures}
+                    for i in self.nodes.values()}

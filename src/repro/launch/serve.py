@@ -50,9 +50,11 @@ def main():
     ap.add_argument("--one-slot-prefill", action="store_true",
                     help="paged engine: disable batched multi-slot prefill")
     ap.add_argument("--target-first-result-s", type=float, default=None,
-                    help="interactive TTFT SLO (gates preemption of "
-                         "batch-class work; same knob as the launch-side "
-                         "WaveController)")
+                    help="interactive first-result SLO: ONE knob, wired "
+                         "end-to-end — gates admission preemption of "
+                         "batch-class work here AND rides the backend to "
+                         "any WaveController built over it, capping "
+                         "launch-side wave sizing at the same target")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent AOT compile cache dir (default: "
                          "$REPRO_COMPILE_CACHE_DIR or ~/.cache/repro-aot); "
@@ -75,9 +77,14 @@ def main():
             for i in range(args.requests)]
     cache = CompileCache(cache_dir=args.cache_dir,
                          persistent=not args.no_cache_spill)
-    backend = ArrayBackend(cache=cache)
+    # the SLO knob is set ONCE, on the shared backend: the admission
+    # scheduler preempts against it below, and any LLMapReduce built over
+    # this backend hands it to its WaveController as the t_first ceiling
+    # (serve SLO -> launch wave sizing, end-to-end)
+    backend = ArrayBackend(cache=cache,
+                           target_first_result_s=args.target_first_result_s)
     sched = AdmissionScheduler(
-        target_first_result_s=args.target_first_result_s)
+        target_first_result_s=backend.target_first_result_s)
     if args.engine == "fixed":
         eng = ServeEngine(cfg, params, slots=args.slots,
                           capacity=args.capacity, backend=backend,

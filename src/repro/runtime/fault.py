@@ -1,17 +1,36 @@
-"""Checkpoint/restart fault tolerance.
+"""Checkpoint/restart fault tolerance, and pluggable failure detection.
 
 ``resilient_train`` wraps any step function in a restart loop: periodic
-(optionally async) checkpoints, and on a worker failure — injected here via a
-hook, detected via heartbeat timeout on a real cluster — the loop restores
-the last COMMITTED checkpoint and replays the deterministic data stream from
-that step. Because the data pipeline is keyed by (seed, step), recovery is
-bit-exact with respect to an uninterrupted run.
+(optionally async) checkpoints, and on a worker failure the loop restores
+the last COMMITTED checkpoint and replays the deterministic data stream
+from that step. Because the data pipeline is keyed by (seed, step),
+recovery is bit-exact with respect to an uninterrupted run.
+
+Failure DETECTION is pluggable: anything with ``check(step)`` that raises
+``WorkerFailure`` is a detector. Two implementations ship here:
+
+  ``HookDetector``       the seed-era injection hook (tests inject a loss
+                         at a chosen step) wrapped as a detector;
+  ``HeartbeatDetector``  lease-style liveness: workers ``beat()``, the
+                         detector raises once any tracked worker's last
+                         beat is older than ``timeout_s``. This is the SAME
+                         detector the distributed launch fabric's
+                         ``NodeRegistry`` (``repro.dist.registry``) builds
+                         its alive/suspect/dead health states on — one
+                         staleness clock for training restarts and launch
+                         re-dispatch.
+
+``check()`` reports a dead worker exactly once (the stale entry is
+dropped as it is reported): after a restart replaces the worker, a fresh
+``beat()`` re-registers it.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, List, Optional, Protocol, \
+    runtime_checkable
 
 import jax
 
@@ -19,7 +38,77 @@ from repro.ckpt import checkpoint as ckpt
 
 
 class WorkerFailure(RuntimeError):
-    """Raised by the failure-injection hook (or heartbeat monitor)."""
+    """Raised by a failure detector (injection hook or heartbeat expiry)."""
+
+
+@runtime_checkable
+class FailureDetector(Protocol):
+    """What the restart loop needs from a detector."""
+
+    def check(self, step: Optional[int] = None) -> None: ...
+
+
+class HookDetector:
+    """Failure-injection hook as a detector: ``hook(step)`` may raise
+    ``WorkerFailure`` to simulate a node loss at a chosen step."""
+
+    def __init__(self, hook: Callable[[int], None]):
+        self.hook = hook
+
+    def check(self, step: Optional[int] = None) -> None:
+        self.hook(step if step is not None else 0)
+
+
+class HeartbeatDetector:
+    """Heartbeat-timeout failure detection (cluster-side liveness).
+
+    Workers (or the node agents of ``repro.dist``) call ``beat(worker)``
+    periodically; any tracked worker whose last beat is older than
+    ``timeout_s`` is stale. ``check()`` raises ``WorkerFailure`` naming
+    the stale workers and forgets them (exactly-once reporting — a
+    replacement worker re-registers itself with its first beat).
+
+    Thread-safe: beats arrive from per-worker threads while the driver
+    reads staleness. ``clock`` is injectable for deterministic tests.
+    """
+
+    def __init__(self, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self.last_seen: Dict[Any, float] = {}
+        self._lock = threading.Lock()
+
+    def beat(self, worker: Any, now: Optional[float] = None) -> None:
+        with self._lock:
+            self.last_seen[worker] = self.clock() if now is None else now
+
+    def forget(self, worker: Any) -> None:
+        with self._lock:
+            self.last_seen.pop(worker, None)
+
+    def age(self, worker: Any, now: Optional[float] = None) -> float:
+        """Seconds since the worker's last beat; +inf if never seen."""
+        now = self.clock() if now is None else now
+        with self._lock:
+            seen = self.last_seen.get(worker)
+        return float("inf") if seen is None else now - seen
+
+    def stale(self, now: Optional[float] = None) -> List[Any]:
+        now = self.clock() if now is None else now
+        with self._lock:
+            return [w for w, t in self.last_seen.items()
+                    if now - t > self.timeout_s]
+
+    def check(self, step: Optional[int] = None) -> None:
+        dead = self.stale()
+        if dead:
+            for w in dead:
+                self.forget(w)
+            raise WorkerFailure(
+                f"heartbeat timeout ({self.timeout_s}s) for worker(s) "
+                f"{sorted(map(str, dead))}"
+                + (f" at step {step}" if step is not None else ""))
 
 
 @dataclass
@@ -41,21 +130,30 @@ class RunReport:
 def resilient_train(step_fn: Callable, state: Any, batch_fn: Callable,
                     n_steps: int, cfg: FaultConfig,
                     failure_hook: Optional[Callable[[int], None]] = None,
+                    detector: Optional[FailureDetector] = None,
                     start_step: int = 0) -> tuple:
     """Run ``n_steps`` of ``step_fn`` with checkpoint/restart.
 
     batch_fn(step) -> batch  (deterministic; replayable after restore).
-    failure_hook(step) may raise WorkerFailure to simulate a node loss.
+    ``failure_hook(step)`` (the seed-era injection hook, kept as one
+    detector implementation) and/or ``detector.check(step)`` may raise
+    ``WorkerFailure`` to trigger a restore — pass a ``HeartbeatDetector``
+    fed by real workers for cluster-side detection.
     Returns (state, RunReport).
     """
+    detectors: List[FailureDetector] = []
+    if failure_hook is not None:
+        detectors.append(HookDetector(failure_hook))
+    if detector is not None:
+        detectors.append(detector)
     report = RunReport()
     step = start_step
     pending = None
     ckpt.save(cfg.ckpt_dir, step, state, blocking=True)
     while step < n_steps:
         try:
-            if failure_hook is not None:
-                failure_hook(step)
+            for d in detectors:
+                d.check(step)
             batch = batch_fn(step)
             state, metrics = step_fn(state, batch)
             step += 1
@@ -83,6 +181,7 @@ def resilient_train(step_fn: Callable, state: Any, batch_fn: Callable,
 
 
 def heartbeat_monitor(last_seen: dict, timeout_s: float = 60.0) -> list:
-    """Return worker ids whose heartbeat is stale (cluster-side detection)."""
+    """Return worker ids whose heartbeat is stale (seed-era helper; the
+    class-shaped version of this logic is ``HeartbeatDetector``)."""
     now = time.time()
     return [w for w, t in last_seen.items() if now - t > timeout_s]

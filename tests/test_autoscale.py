@@ -137,6 +137,42 @@ def test_lanes_flat_on_single_device_hierarchical_on_many():
     assert d.wave // d.inner_lanes >= 4            # node >= devices
 
 
+def test_nodes_widen_the_parallel_width():
+    """The distributed fabric's alive-node count is a sizing input: a
+    multi-node single-device fabric gets a hierarchy (width = devices x
+    nodes), and waves never shrink below the fleet size."""
+    c = WaveController(n_tasks=4096, devices=1, nodes=4, start_wave=1024)
+    d = c.next_wave(4096)
+    assert d.inner_lanes > 1
+    assert d.wave % d.inner_lanes == 0
+    assert d.wave // d.inner_lanes >= 4            # node level >= width
+    tiny = WaveController(n_tasks=4096, nodes=128, min_wave=64)
+    assert tiny.min_wave == 128                    # no node left idle
+
+
+def test_slo_changes_wave_size_decisions():
+    """Regression for the serve->launch SLO wiring: the SAME measured
+    telemetry must produce different wave ladders under a tight
+    ``target_first_result_s`` (the first result is late -> shrink) than
+    under no SLO (healthy -> hold/probe)."""
+    def ladder(slo):
+        c = WaveController(n_tasks=BIG, start_wave=1024,
+                           target_first_result_s=slo)
+        sizes = []
+        for _ in range(4):
+            d = c.next_wave(BIG)
+            sizes.append(d.wave)
+            # healthy wave, but the first result lands after 0.25s
+            c.observe(_rec(d.wave, 0.001, t_spawn=0.3, t_first=0.25),
+                      t_wave=0.3, tasks_left=BIG)
+        return sizes, c
+    free_sizes, free_c = ladder(None)
+    slo_sizes, slo_c = ladder(0.05)                # 0.25s >> 50ms target
+    assert slo_sizes != free_sizes
+    assert slo_c.wave < free_c.wave                # SLO shrank the ladder
+    assert "t_first" in slo_c._reason or "shrink" in slo_c._reason
+
+
 def test_tail_waves_do_not_steer_the_ladder():
     c = WaveController(n_tasks=BIG, start_wave=1024)
     c.next_wave(BIG)
@@ -180,3 +216,43 @@ def test_make_backend_normalizes_auto_inner_lanes(cache):
     be = make_backend("pipelined", cache=cache, inner_lanes="auto")
     assert be.inner_lanes is None          # per-wave override drives it
     assert be.supports_lane_override
+
+
+def test_backend_slo_reaches_wave_controller_end_to_end(cache):
+    """The serve CLI sets ``target_first_result_s`` ONCE on the backend;
+    an auto-sized launch over that backend must hand the same value to
+    its WaveController (serve SLO -> launch wave sizing)."""
+    seen = {}
+
+    def factory(**kw):
+        seen.update(kw)
+        from repro.core.autoscale import WaveController
+        return WaveController(**kw)
+
+    be = PipelinedBackend(cache=cache, target_first_result_s=0.123)
+    llmr = LLMapReduce(wave_size="auto", backend=be, controller=factory)
+    inputs = np.ones((16, 4), np.float32)
+    llmr.map_reduce(app, inputs)
+    assert seen["target_first_result_s"] == 0.123
+    # an explicit LLMapReduce-level value overrides the backend's
+    seen.clear()
+    LLMapReduce(wave_size="auto", backend=be, controller=factory,
+                target_first_result_s=0.5).map_reduce(app, inputs)
+    assert seen["target_first_result_s"] == 0.5
+
+
+def test_seed_era_controller_factories_still_work(cache):
+    """Factories predating ``nodes``/``target_first_result_s`` must not
+    be handed kwargs they cannot accept."""
+    calls = {}
+
+    def old_factory(n_tasks, devices):
+        calls["kw"] = {"n_tasks": n_tasks, "devices": devices}
+        return WaveController(n_tasks=n_tasks, devices=devices)
+
+    be = PipelinedBackend(cache=cache, target_first_result_s=1.0)
+    out, rep = LLMapReduce(wave_size="auto", backend=be,
+                           controller=old_factory).map_reduce(
+        app, np.ones((16, 4), np.float32))
+    assert calls["kw"]["n_tasks"] == 16
+    assert rep.n_instances == 16

@@ -23,16 +23,31 @@ def cache(tmp_path):
 
 
 def _backends(cache):
+    from repro.dist.backend import DistributedBackend
     return [SerialBackend(), ArrayBackend(cache=cache),
             PipelinedBackend(cache=cache),
             ArrayBackend(cache=cache, inner_lanes=4),
-            PipelinedBackend(cache=cache, inner_lanes=4, depth=3)]
+            PipelinedBackend(cache=cache, inner_lanes=4, depth=3),
+            # the multi-host fabric speaks the same protocol end-to-end
+            # (generous lease: a busy CI box must not false-kill nodes)
+            DistributedBackend(n_nodes=2, cache=cache,
+                               heartbeat_timeout_s=30.0)]
+
+
+def _close_all(backends):
+    for be in backends:                 # dist backends own node threads
+        if hasattr(be, "close"):
+            be.close()
 
 
 def test_all_backends_satisfy_protocol(cache):
-    for be in _backends(cache):
-        assert isinstance(be, LaunchBackend)
-        assert isinstance(be.name, str) and be.max_in_flight >= 1
+    backends = _backends(cache)
+    try:
+        for be in backends:
+            assert isinstance(be, LaunchBackend)
+            assert isinstance(be.name, str) and be.max_in_flight >= 1
+    finally:
+        _close_all(backends)
 
 
 def test_factory_rejects_unknown_kind():
@@ -48,14 +63,18 @@ def test_backend_outputs_identical(n, tmp_path):
     inputs = np.random.default_rng(n).standard_normal((n, 8)).astype(
         np.float32)
     expect = inputs.sum(-1) * 3.0
-    for be in _backends(cache):
-        out, rec = be.launch(app, inputs, n)
-        got = (np.asarray([np.asarray(o) for o in out])
-               if isinstance(out, list) else np.asarray(out))
-        np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-4,
-                                   err_msg=be.name)
-        assert rec.n_instances == n
-        assert rec.t_first_result > 0.0
+    backends = _backends(cache)
+    try:
+        for be in backends:
+            out, rec = be.launch(app, inputs, n)
+            got = (np.asarray([np.asarray(o) for o in out])
+                   if isinstance(out, list) else np.asarray(out))
+            np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-4,
+                                       err_msg=be.name)
+            assert rec.n_instances == n
+            assert rec.t_first_result > 0.0
+    finally:
+        _close_all(backends)
 
 
 def test_wavehandle_lifecycle(cache):

@@ -1,0 +1,262 @@
+"""Distributed launch fabric: registry health/lease lifecycle, capacity-
+weighted sharding, the LaunchBackend contract over nodes, and the failure
+matrix — node dies mid-wave (exactly-once + both attempts' records), node
+joins mid-run (receives subsequent waves), all nodes dead (clean error,
+no hang), real multiprocessing node death (shard failover)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.compile_cache import CompileCache
+from repro.core.llmr import LLMapReduce
+from repro.core.telemetry import HEADER, nodes_rollup
+from repro.dist import (ALIVE, DEAD, LEFT, SUSPECT, DistributedBackend,
+                        NoAliveNodesError, NodeAgent, NodeRegistry)
+from repro.dist.backend import split_by_capacity
+
+
+def app(x):
+    return (x * 3.0).sum(axis=-1)
+
+
+@pytest.fixture()
+def cache(tmp_path):
+    return CompileCache(cache_dir=str(tmp_path / "aot"))
+
+
+def _fabric(cache, n_nodes=2, timeout=0.3, **kw):
+    """A local thread-node fabric with fast leases (CI-scale timings)."""
+    kw.setdefault("heartbeat_s", 0.02)
+    return DistributedBackend(n_nodes=n_nodes, cache=cache,
+                              heartbeat_timeout_s=timeout, **kw)
+
+
+# ----------------------------------------------------------------------
+# registry: membership, leases, health
+# ----------------------------------------------------------------------
+
+def test_registry_health_lifecycle():
+    t = [0.0]
+    reg = NodeRegistry(heartbeat_timeout_s=1.0, clock=lambda: t[0])
+    reg.register("a")
+    reg.register("b", capacity=3)
+    assert sorted(i.node_id for i in reg.alive()) == ["a", "b"]
+
+    t[0] = 0.6                      # a silent past suspect_after (0.5)
+    reg.heartbeat("b")
+    assert reg.state("a") == SUSPECT and reg.state("b") == ALIVE
+    # suspects are excluded from NEW waves...
+    assert [i.node_id for i in reg.alive()] == ["b"]
+    # ...but recover with a beat
+    assert reg.heartbeat("a")
+    assert reg.state("a") == ALIVE
+
+    t[0] = 2.0                      # both silent past the 1.0s lease
+    assert reg.state("a") == DEAD and reg.state("b") == DEAD
+    assert reg.nodes["a"].failures == 1
+    # a zombie's late beat is ignored: the lease is gone
+    assert not reg.heartbeat("a")
+    assert reg.state("a") == DEAD
+    # elastic re-join: register revives the id with a fresh lease
+    reg.register("a")
+    assert reg.state("a") == ALIVE
+    reg.deregister("b")             # graceful leave is not a failure
+    assert reg.state("b") == LEFT
+    assert not reg.heartbeat("b")
+    assert reg.nodes["b"].failures == 1     # only the earlier lease expiry
+    assert [i.node_id for i in reg.alive()] == ["a"]
+    assert reg.state("never-registered") == DEAD
+
+
+def test_capacity_weighted_split():
+    assert split_by_capacity(10, [1, 1]) == [5, 5]
+    assert split_by_capacity(10, [3, 1]) == [8, 2]
+    assert split_by_capacity(1, [1, 1, 1]) == [1, 0, 0]   # runt waves skip
+    assert split_by_capacity(7, [2, 1, 1]) == [3, 2, 2]  # largest remainder
+    assert sum(split_by_capacity(997, [5, 3, 2, 1])) == 997
+
+
+# ----------------------------------------------------------------------
+# the LaunchBackend contract over nodes
+# ----------------------------------------------------------------------
+
+def test_dist_matches_single_host_and_records_nodes(cache):
+    be = _fabric(cache, n_nodes=3, capacities=[2, 1, 1])
+    inputs = np.random.default_rng(0).standard_normal((24, 8)).astype(
+        np.float32)
+    out, rec = be.launch(app, inputs, 24)
+    np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 3.0,
+                               rtol=1e-5, atol=1e-4)
+    assert rec.n_instances == 24
+    assert rec.t_first_result > 0.0
+    # capacity 2 node gets half the wave; per-node shard detail rolls up
+    assert rec.fanout == {"sched": 1, "node": 3, "core": 1}
+    assert rec.n_nodes == 3
+    spans = {nid: d["n"] for nid, d in rec.nodes().items()}
+    assert spans == {"node0": 12, "node1": 6, "node2": 6}
+    # the new telemetry columns keep HEADER and row() in lockstep
+    assert len(rec.row().split(",")) == len(HEADER.split(","))
+    assert "n_nodes" in HEADER and "node_failure" in HEADER
+    be.close()
+
+
+def test_dist_backend_compiles_for_local_callers(cache):
+    """Serve engines call ``backend.compile`` and execute locally; the
+    fabric must expose the same entry point over its driver-side cache."""
+    import jax.numpy as jnp
+    be = _fabric(cache, n_nodes=2)
+    x = jnp.ones((4, 4), jnp.float32)
+
+    def double(a):
+        return a * 2.0
+
+    compiled, source = be.compile(double, (x,))
+    assert source == "compiled"
+    np.testing.assert_allclose(np.asarray(compiled(x)), np.full((4, 4), 2.0))
+    _, source2 = be.compile(double, (x,))
+    assert source2 == "memory"              # same driver-side cache
+    be.close()
+
+
+def test_dist_through_llmr_with_autoscale_nodes_input(cache):
+    """The policy layer runs unchanged over the fabric, and the wave
+    controller learns the fabric's width (nodes=) without API change."""
+    seen = {}
+
+    def factory(**kw):
+        seen.update(kw)
+        from repro.core.autoscale import WaveController
+        return WaveController(**kw)
+
+    be = _fabric(cache, n_nodes=2)
+    inputs = np.random.default_rng(1).standard_normal((300, 8)).astype(
+        np.float32)
+    llmr = LLMapReduce(wave_size="auto", backend=be, controller=factory)
+    out, rep = llmr.map_reduce(app, inputs)
+    np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 3.0,
+                               rtol=1e-5, atol=1e-4)
+    assert rep.n_instances == 300
+    assert seen["nodes"] == 2
+    roll = nodes_rollup(rep.records)
+    assert sum(d["instances"] for d in roll.values()) >= 300
+    assert set(roll) == {"node0", "node1"}
+    be.close()
+
+
+# ----------------------------------------------------------------------
+# failure matrix
+# ----------------------------------------------------------------------
+
+def test_node_dies_mid_wave_exactly_once(cache):
+    """Kill one node with its shards in flight: every task's result is
+    produced exactly once, the dead attempts' records are kept under
+    ``superseded_by_redispatch``, and the winners are marked as
+    node-failure re-dispatches."""
+    be = _fabric(cache, n_nodes=2)
+    llmr = LLMapReduce(wave_size=32, backend=be)
+    inputs = np.random.default_rng(2).standard_normal((64, 8)).astype(
+        np.float32)
+    llmr.map_reduce(app, inputs)            # warm compiles on both nodes
+
+    victim = be.agents["node1"]
+    victim.pause()                          # wedged: heartbeats continue
+    killer = threading.Timer(0.05, victim.kill)
+    killer.start()
+    out, rep = llmr.map_reduce(app, inputs)
+    killer.join()
+
+    np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 3.0,
+                               rtol=1e-5, atol=1e-4)
+    assert rep.n_instances == 64            # exactly once
+    assert rep.n_attempts > 64              # both attempts' records kept
+    assert rep.node_failures >= 1
+    losers = [r for r in rep.records if r.superseded]
+    winners = [r for r in rep.records if r.redispatch]
+    assert losers and winners
+    assert any(r.node_failure for r in losers)
+    assert any("node1" in r.extra.get("failed_nodes", []) for r in losers)
+    assert any(r.extra.get("redispatch_cause") == "node_failure"
+               for r in winners)
+    # the dead node's lease expired exactly once in the registry
+    assert be.registry.nodes["node1"].failures == 1
+    be.close()
+
+
+def test_node_joins_mid_run_receives_waves(cache):
+    """Elastic join: a node that registers mid-run starts receiving the
+    very next wave."""
+    be = _fabric(cache, n_nodes=1)
+    joined = {}
+
+    def loader(lo, hi):
+        if lo >= 32 and "agent" not in joined:
+            joined["agent"] = NodeAgent("late", be.registry, cache=cache,
+                                        heartbeat_s=0.02)
+            be.add_node(joined["agent"])
+        x = np.ones((hi - lo, 4), np.float32)
+        return x
+
+    llmr = LLMapReduce(wave_size=16, backend=be)
+    out, rep = llmr.map_reduce(app, loader, n_tasks=64)
+    np.testing.assert_allclose(np.asarray(out), np.full(64, 12.0))
+    assert rep.n_instances == 64
+    widths = [r.n_nodes for r in rep.records]
+    assert widths[0] == 1 and max(widths) == 2   # later waves span both
+    assert be.registry.rollup()["late"]["instances"] > 0
+    be.close()
+    joined["agent"].stop()
+
+
+def test_all_nodes_dead_raises_cleanly(cache):
+    """Losing every node mid-run is a clean ``NoAliveNodesError``, not a
+    hang."""
+    be = _fabric(cache, n_nodes=2, timeout=0.25)
+    llmr = LLMapReduce(wave_size=16, backend=be)
+
+    def loader(lo, hi):
+        if lo >= 16:                        # first wave is in flight
+            for agent in be.agents.values():
+                agent.kill()
+        return np.ones((hi - lo, 4), np.float32)
+
+    t0 = time.perf_counter()
+    with pytest.raises(NoAliveNodesError):
+        llmr.map_reduce(app, loader, n_tasks=64)
+    assert time.perf_counter() - t0 < 30.0  # error, not a hang
+
+
+def test_graceful_leave_is_not_a_failure(cache):
+    be = _fabric(cache, n_nodes=2)
+    inputs = np.ones((8, 4), np.float32)
+    be.launch(app, inputs, 8)
+    be.agents["node1"].stop()               # drain + deregister
+    out, rec = be.launch(app, inputs, 8)    # next wave: node0 only
+    np.testing.assert_allclose(np.asarray(out), np.full(8, 12.0))
+    assert rec.n_nodes == 1
+    assert be.registry.nodes["node1"].failures == 0
+    assert be.registry.state("node1") == LEFT
+    be.close()
+
+
+def test_process_nodes_compute_and_fail_over(cache):
+    """Real multiprocessing nodes: separate JAX runtimes; a SIGTERM'd
+    node is detected by lease expiry and its shard fails over."""
+    be = DistributedBackend(n_nodes=2, node_mode="process",
+                            heartbeat_timeout_s=1.0)
+    try:
+        inputs = np.random.default_rng(3).standard_normal((12, 8)).astype(
+            np.float32)
+        out, rec = be.launch(app, inputs, 12)
+        np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 3.0,
+                                   rtol=1e-5, atol=1e-4)
+        assert rec.n_nodes == 2
+        be.agents["node1"].kill()           # hard process death
+        out, rec = be.launch(app, inputs, 12)
+        np.testing.assert_allclose(np.asarray(out), inputs.sum(-1) * 3.0,
+                                   rtol=1e-5, atol=1e-4)
+        # the wave was placed before detection: the dead shard moved
+        assert rec.extra.get("failover") or rec.n_nodes == 1
+    finally:
+        be.close()

@@ -11,7 +11,9 @@ from repro.ckpt import checkpoint as ckpt
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, synth_batch
 from repro.runtime.compress import compress_grads, ef_init
-from repro.runtime.fault import FaultConfig, WorkerFailure, resilient_train
+from repro.runtime.fault import (FailureDetector, FaultConfig,
+                                 HeartbeatDetector, HookDetector,
+                                 WorkerFailure, resilient_train)
 from repro.train.optimizer import AdamWConfig
 from repro.train.step import init_state, make_train_step
 
@@ -94,6 +96,54 @@ def test_compression_error_feedback_converges():
         acc = acc + out["w"]
     np.testing.assert_allclose(np.asarray(acc), np.full(64, 0.15),
                                rtol=0.05)
+
+
+def test_heartbeat_detector_reports_dead_worker_once():
+    t = [0.0]
+    det = HeartbeatDetector(timeout_s=1.0, clock=lambda: t[0])
+    assert isinstance(det, FailureDetector)
+    assert isinstance(HookDetector(lambda s: None), FailureDetector)
+    det.beat("w0")
+    det.beat("w1")
+    det.check()                             # everyone fresh: no raise
+    t[0] = 0.9
+    det.beat("w1")
+    t[0] = 1.5                              # w0 silent past the lease
+    assert det.stale() == ["w0"]
+    assert det.age("w0") == pytest.approx(1.5)
+    assert det.age("unknown") == float("inf")
+    with pytest.raises(WorkerFailure, match="w0"):
+        det.check(step=5)
+    det.check()                             # reported once, then forgotten
+    det.beat("w0")                          # a replacement re-registers
+    det.check()
+
+
+def test_resilient_train_with_pluggable_detector(tmp_path):
+    """The restart loop accepts any FailureDetector — here a heartbeat
+    detector whose tracked worker goes silent mid-run — alongside (not
+    instead of) the seed-era injection hook."""
+    t = [0.0]
+    det = HeartbeatDetector(timeout_s=10.0, clock=lambda: t[0])
+    det.beat("node0")
+
+    def step_fn(state, batch):
+        return {"x": state["x"] + 1.0}, {}
+
+    def batch_fn(step):
+        if step == 3:
+            t[0] = 99.0                     # node0's lease expires...
+        return None
+
+    fcfg = FaultConfig(ckpt_dir=str(tmp_path / "ck"), ckpt_every=2,
+                       async_save=False)
+    state, report = resilient_train(step_fn, {"x": jnp.zeros(())},
+                                    batch_fn, 6, fcfg, detector=det)
+    # ...detected entering step 4 -> restore from the last committed
+    # checkpoint (step 4, saved right after step 3 ran), replay, finish
+    assert report.restarts == 1
+    assert report.restore_steps == [4]
+    assert float(state["x"]) == 6.0
 
 
 def test_compression_int8_bounds():
