@@ -44,6 +44,19 @@ def _app_wave(x):
     return x.sum(-1)
 
 
+def _app_wave_heavy(x):
+    """3x the compute of ``_app_wave`` on the same payload: used where a
+    measurement needs execution to dominate transfer (staging overlap)
+    even on a loaded box — if the wire is slower than the compute, there
+    is nothing to hide behind and the overlap gate would measure the
+    machine, not the mechanism."""
+    x = x[:384]
+    w = jnp.full((x.shape[-1], x.shape[-1]), 0.01, x.dtype)
+    for _ in range(6):
+        x = jnp.tanh(x @ w) + x * 0.1
+    return x.sum(-1)
+
+
 def _wave_loader(base):
     """The paper's input-set scan: decode + normalize + stage each wave's
     instance inputs from the (float64) source on the host."""
@@ -97,10 +110,16 @@ def bench_fig5_copy_time():
     rows = []
     _, rec_pull = stage_parallel_pull(env, shard_tree)
     _, rec_p2p = stage_point_to_point(env, devices)
+    # bytes_total is normalized: bytes DELIVERED to devices under both
+    # strategies, so the gb_per_s columns are directly comparable
     rows.append(("fig5_copy_measured_pull", rec_pull.t_stage * 1e6,
-                 f"bytes={tree_bytes(env)}"))
+                 f"src_bytes={tree_bytes(env)} "
+                 f"delivered={rec_pull.extra['bytes_total']} "
+                 f"gb_per_s={rec_pull.extra['gb_per_s']:.2f}"))
     rows.append(("fig5_copy_measured_p2p", rec_p2p.t_stage * 1e6,
-                 f"devices={len(devices)}"))
+                 f"devices={len(devices)} "
+                 f"delivered={rec_p2p.extra['bytes_total']} "
+                 f"gb_per_s={rec_p2p.extra['gb_per_s']:.2f}"))
     for n in (16, 256, 4096, 16384):
         rows.append((f"fig5_copy_model_n{n}", copy_time(n) * 1e6,
                      "paper-scale model"))
@@ -437,17 +456,29 @@ def bench_fig_dist():
     (a) weak scaling: 1/2/4 local nodes, tasks per node held constant —
         t_launch per instance as the fabric widens (thread-simulated
         nodes share one CPU, so the point is protocol overhead, not
-        speedup: the per-instance cost must stay the same order);
+        speedup: the per-instance cost must stay the same order). Runs
+        over ``--transport`` (inproc queues by default; socket = length-
+        prefixed frames over localhost TCP), with a 2-node transport A/B
+        row quantifying the wire's own overhead;
     (b) node-kill recovery: one of two nodes is killed mid-run; the
         heartbeat lease expires, the dead node's in-flight waves feed
         back through the barrier-free speculative re-dispatch, and the
         wall clock must stay < 2x the no-failure run — with every task's
-        result produced exactly once.
+        result produced exactly once;
+    (c) staging overlap: with pipelined waves, each node's receiver
+        stages wave k+1's STAGE payloads while the worker executes wave
+        k — the hidden fraction of the total stage wall must be >= 50%
+        (vs the unoverlapped path, where payloads ride inside SUBMIT and
+        stage on the critical path: 0% hidden by construction);
+    (d) measured capacity re-weighting: one of two equal-capacity nodes
+        is throttled; its measured cost EWMA must shrink its shards
+        within 3 waves (the slow-node share per wave is reported).
     """
     import threading
 
     from repro.core.compile_cache import CompileCache
     from repro.core.llmr import LLMapReduce
+    from repro.core.telemetry import stage_rollup
     from repro.dist.backend import DistributedBackend
 
     per_node = 512 if _QUICK else 1024
@@ -462,6 +493,7 @@ def bench_fig_dist():
         loader = _wave_loader(base)
         cache = CompileCache(cache_dir=tempfile.mkdtemp(prefix="repro-aot-"))
         be = DistributedBackend(n_nodes=nodes, cache=cache,
+                                transport=_TRANSPORT,
                                 heartbeat_timeout_s=10.0)
         llmr = LLMapReduce(wave_size=wave, backend=be)
         llmr.map_reduce(_app_wave, loader, n_tasks=n)          # warm
@@ -473,14 +505,127 @@ def bench_fig_dist():
         t = float(np.median(ts))
         rows.append((f"fig_dist_nodes{nodes}", t * 1e6 / n,
                      f"total_s={t:.4f} n={n} waves={rep.waves} "
-                     f"per_node={per_node} (weak scaling)"))
+                     f"per_node={per_node} transport={_TRANSPORT} "
+                     f"(weak scaling)"))
         be.close()
+
+    # -- (a2) transport A/B: the wire's own overhead at 2 nodes ----------
+    n = per_node * 2
+    base = np.random.default_rng(8).standard_normal((n, 1536))
+    loader = _wave_loader(base)
+    t_by_wire = {}
+    for wire in ("inproc", "socket"):
+        cache = CompileCache(cache_dir=tempfile.mkdtemp(prefix="repro-aot-"))
+        be = DistributedBackend(n_nodes=2, cache=cache, transport=wire,
+                                heartbeat_timeout_s=10.0)
+        llmr = LLMapReduce(wave_size=wave, backend=be)
+        llmr.map_reduce(_app_wave, loader, n_tasks=n)          # warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            llmr.map_reduce(_app_wave, loader, n_tasks=n)
+            ts.append(time.perf_counter() - t0)
+        t_by_wire[wire] = float(np.median(ts))
+        rows.append((f"fig_dist_transport_{wire}",
+                     t_by_wire[wire] * 1e6 / n,
+                     f"total_s={t_by_wire[wire]:.4f} n={n}"))
+        be.close()
+    rows.append(("fig_dist_transport_overhead",
+                 t_by_wire["socket"] / t_by_wire["inproc"],
+                 f"socket/inproc={t_by_wire['socket'] / t_by_wire['inproc']:.3f}x "
+                 f"(serialization + TCP per wave shard)"))
+
+    # -- (c) staging overlap ---------------------------------------------
+    # measured on back-to-back dispatches (every wave in flight at once)
+    # so nodes always have queued work: each STAGE after a node's first
+    # arrives while its worker executes — the controlled form of "stream
+    # wave k+1's payloads while wave k executes". (The LLMapReduce-paced
+    # pipeline gets the same overlap when harvest keeps the queue fed,
+    # but its idle windows track machine load — not a CI gate.)
+    n_waves = 6 if _QUICK else 10
+    base = np.random.default_rng(9).standard_normal((wave * n_waves, 1536))
+    loader = _wave_loader(base)
+    chunks = [loader(i * wave, (i + 1) * wave) for i in range(n_waves)]
+    stage_stats = {}
+    for mode, overlap in (("overlap", True), ("inline", False)):
+        cache = CompileCache(cache_dir=tempfile.mkdtemp(prefix="repro-aot-"))
+        be = DistributedBackend(n_nodes=2, cache=cache,
+                                transport=_TRANSPORT,
+                                overlap_staging=overlap,
+                                heartbeat_timeout_s=10.0)
+        be.launch(_app_wave_heavy, chunks[0], wave)            # warm
+        handles = [be.dispatch(_app_wave_heavy, c, wave) for c in chunks]
+        recs = [h.result()[1] for h in handles]
+        stage_stats[mode] = stage_rollup(recs)
+        stage_stats[mode]["visible_s"] = sum(r.t_stage for r in recs)
+        be.close()
+    hidden_frac = stage_stats["overlap"]["hidden_frac"]
+    rows.append(("fig_dist_stage_overlap", hidden_frac,
+                 f"hidden_frac={hidden_frac:.3f} "
+                 f"stage_wall_s={stage_stats['overlap']['wall_s']:.4f} "
+                 f"visible_s={stage_stats['overlap']['visible_s']:.4f} "
+                 f"inline_visible_s={stage_stats['inline']['visible_s']:.4f} "
+                 f"inline_hidden_frac={stage_stats['inline']['hidden_frac']:.3f} "
+                 f"(must hide >= 0.5 of stage wall)"))
+    if hidden_frac < 0.5:
+        raise RuntimeError(
+            f"fig_dist: staging overlap hid only {hidden_frac:.1%} of the "
+            f"stage wall (bar: 50%) — the STAGE-ahead path is not "
+            f"overlapping with execution")
+
+    # -- (d) measured capacity re-weighting ------------------------------
+    n = wave * (6 if _QUICK else 10)
+    base = np.random.default_rng(10).standard_normal((n, 1536))
+    loader = _wave_loader(base)
+    cache_dir = tempfile.mkdtemp(prefix="repro-aot-")
+    be = DistributedBackend(n_nodes=2,
+                            cache=CompileCache(cache_dir=cache_dir),
+                            transport=_TRANSPORT,
+                            depth=1, heartbeat_timeout_s=10.0)
+    LLMapReduce(wave_size=wave, backend=be).map_reduce(
+        _app_wave, loader, n_tasks=n)       # warm the shared disk cache
+    be.close()
+    # measure on a FRESH fabric (fresh cost EWMAs, warm compiles): the
+    # convergence clock must start from the declared-capacity split, not
+    # from whatever imbalance warm-run jitter left behind
+    be = DistributedBackend(n_nodes=2,
+                            cache=CompileCache(cache_dir=cache_dir),
+                            transport=_TRANSPORT,
+                            depth=1, heartbeat_timeout_s=10.0)
+    llmr = LLMapReduce(wave_size=wave, backend=be)
+    # 0.1 s/shard: even with exec inflated by a loaded box, the measured
+    # cost ratio stays well above the 0.4-share convergence bar
+    be.agents["node1"].throttle(0.1)        # the deliberately slow node
+    _, rep = llmr.map_reduce(_app_wave, loader, n_tasks=n)
+    shares = [r.nodes().get("node1", {}).get("n", 0) / r.n_instances
+              for r in rep.records if not r.superseded]
+    roll = be.registry.rollup()
+    cost_ratio = (roll["node1"]["cost_per_instance"]
+                  / max(roll["node0"]["cost_per_instance"], 1e-12))
+    be.close()
+    # convergence bar 0.4: a balanced split is 0.5 +- rounding, so only
+    # a clearly-shrunken share counts as the re-weighting engaging
+    converged_by = next((i for i, s in enumerate(shares) if s < 0.4), None)
+    rows.append(("fig_dist_reweight_slow_node_share", shares[-1],
+                 f"first_wave={shares[0]:.3f} wave3={shares[min(3, len(shares) - 1)]:.3f} "
+                 f"final={shares[-1]:.3f} converged_by_wave={converged_by} "
+                 f"measured_cost_ratio={cost_ratio:.1f}x "
+                 f"(slow node must shrink within 3 waves)"))
+    if converged_by is None or converged_by > 3:
+        raise RuntimeError(
+            f"fig_dist: throttled node's shard share never dropped below "
+            f"0.4 within 3 waves (shares: {[f'{s:.2f}' for s in shares]})"
+            f" — measured capacity re-weighting is not engaging")
 
     # -- (b) node-kill recovery ------------------------------------------
     # big enough that the lease-expiry window is a small fraction of the
-    # run (a real cluster's detection latency amortizes the same way);
-    # the lease itself sits well above this box's thread-scheduling
-    # jitter — a beat missed under GIL load must not read as a death
+    # run (a real cluster's detection latency amortizes the same way).
+    # The lease must sit well above this box's beat RELAY jitter: beats
+    # now travel node-hb-thread -> channel -> driver pump -> registry,
+    # and under full bench load the measured relay gap is ~26 ms median
+    # but ~170 ms p99 / ~290 ms max (GIL scheduling bursts) — 0.5 s
+    # keeps ~1.7x headroom over the worst observed gap, so a beat
+    # delayed under load must not read as a death
     n = per_node * 16
     base = np.random.default_rng(6).standard_normal((n, 1536))
     loader = _wave_loader(base)
@@ -495,7 +640,8 @@ def bench_fig_dist():
         # node's slots await lease expiry (stall window = detection only)
         be = DistributedBackend(
             n_nodes=4, cache=CompileCache(cache_dir=kill_cache_dir),
-            depth=4, heartbeat_timeout_s=0.25, heartbeat_s=0.02)
+            transport=_TRANSPORT,
+            depth=4, heartbeat_timeout_s=0.5, heartbeat_s=0.02)
         llmr = LLMapReduce(wave_size=wave, backend=be)
         llmr.map_reduce(_app_wave, loader, n_tasks=n)          # warm
         killer = None
@@ -518,6 +664,7 @@ def bench_fig_dist():
     # signal the < 2x bar is meant to measure
     clean_ts, kill_ts, oks, rep_k = [], [], [], None
     failures_seen = 0
+    stranded_seen = 0
     for _ in range(3):
         dt, _, ok = run()
         clean_ts.append(dt)
@@ -526,17 +673,29 @@ def bench_fig_dist():
         kill_ts.append(dt)
         oks.append(ok and rep_k.n_instances == n)
         failures_seen += rep_k.node_failures
-    if failures_seen == 0:
+        # a wave stranded by the kill = a superseded (losing) attempt
+        # that held a shard on the killed node. Attribution of its
+        # re-dispatch races: the straggler threshold (~0.25 s) can fire
+        # before the 0.5 s lease expires, in which case the SAME
+        # barrier-free duplicate path recovers the wave without the
+        # node_failure label — both count as recovery
+        stranded_seen += sum(
+            1 for r in rep_k.records
+            if r.superseded and any(s.get("node") == "node3"
+                                    for s in r.extra.get("shards", [])))
+    if stranded_seen == 0:
         # a kill that never landed in-flight measures nothing: fail the
         # smoke loudly instead of passing a vacuous recovery row
         raise RuntimeError("fig_dist: node kill never stranded a wave "
-                           "(0 node_failures across 3 killed runs)")
+                           "(0 stranded-wave recoveries across 3 killed "
+                           "runs)")
     t_clean = float(np.median(clean_ts))
     t_kill = float(np.median(kill_ts))
     redis = [r for r in rep_k.records if r.redispatch]
     rows.append(("fig_dist_node_kill_recovery", t_kill / t_clean,
                  f"clean_s={t_clean:.3f} killed_s={t_kill:.3f} "
-                 f"node_failures={rep_k.node_failures} "
+                 f"stranded_recovered_3runs={stranded_seen} "
+                 f"node_failure_attributed_3runs={failures_seen} "
                  f"redispatched_waves={len(redis)} "
                  f"results_exactly_once={all(oks)} "
                  f"(median of 3 pairs; must stay < 2x)"))
@@ -675,18 +834,26 @@ QUICK = ("fig5", "fig6_backends", "cache")
 
 # --quick also shrinks the sweep of benches that honour it (fig_autoscale)
 _QUICK = False
+# --transport picks the distributed fabric's wire (fig_dist)
+_TRANSPORT = "inproc"
 
 
 def main(argv=None) -> None:
-    global _QUICK
+    global _QUICK, _TRANSPORT
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma-separated subset of {sorted(BENCHES)}")
     ap.add_argument("--quick", action="store_true",
                     help=f"CI smoke subset: {','.join(QUICK)}; with --only, "
                          f"shrinks the selected benches' sweeps instead")
+    ap.add_argument("--transport", default="inproc",
+                    choices=("inproc", "socket"),
+                    help="the distributed fabric's wire for fig_dist "
+                         "(inproc queues, or length-prefixed frames over "
+                         "localhost TCP)")
     args = ap.parse_args(argv)
     _QUICK = args.quick
+    _TRANSPORT = args.transport
     names = (args.only.split(",") if args.only
              else QUICK if args.quick else list(BENCHES))
     unknown = [n for n in names if n not in BENCHES]

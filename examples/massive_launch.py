@@ -6,7 +6,7 @@ persistent AOT compile cache, plus the paper-scale model comparison.
 
     PYTHONPATH=src python examples/massive_launch.py [--n 16384]
         [--wave auto|<int>] [--backend pipelined|array|serial]
-        [--nodes N] [--compare]
+        [--nodes N] [--transport inproc|socket] [--compare]
 
 ``--wave auto`` engages the measured-telemetry WaveController: wave sizes
 (and node/core fan-out) are picked per wave from t_schedule /
@@ -15,8 +15,12 @@ t_first_result / drain, AIMD-style, instead of a static knob.
 ``--nodes N`` (N > 1) launches through the distributed fabric
 (``repro.dist``): one dispatch per wave fans out across N local node
 agents — each with its own backend, compile cache, and heartbeat lease —
-and the per-node split is printed after the launch. This is the paper's
-scheduler -> node -> core tree with ALL THREE levels real.
+and the per-node split, staging-overlap, and measured re-weighting stats
+are printed after the launch. This is the paper's scheduler -> node ->
+core tree with ALL THREE levels real. ``--transport socket`` swaps the
+fabric's wire from in-process queues to length-prefixed frames over
+localhost TCP (one connection per node), so every shard payload really
+serializes and travels.
 """
 import argparse
 import time
@@ -28,7 +32,7 @@ from repro.core.compile_cache import CompileCache
 from repro.core.launch_model import CURVES, copy_time
 from repro.core.llmr import LLMapReduce
 from repro.core.staging import stage_parallel_pull, synth_env, tree_bytes
-from repro.core.telemetry import nodes_rollup, table
+from repro.core.telemetry import nodes_rollup, stage_rollup, table
 
 
 def app(x):
@@ -39,7 +43,8 @@ def make_launch_backend(kind, cache, args):
     if args.nodes > 1:
         node_kind = "array" if kind == "serial" else kind
         return make_backend("dist", cache=cache, n_nodes=args.nodes,
-                            node_backend=node_kind)
+                            node_backend=node_kind,
+                            transport=args.transport)
     return make_backend(kind, cache=cache)
 
 
@@ -50,9 +55,13 @@ def run_launch(kind, cache, args, inputs):
     outs, report = llmr.map_reduce(app, inputs,
                                    reduce_fn=lambda xs: np.asarray(xs).sum())
     dt = time.perf_counter() - t0
+    fabric = None
+    if args.nodes > 1:
+        # snapshot the registry's measured view before the agents stop
+        fabric = backend.registry.rollup()
     if hasattr(backend, "close"):
         backend.close()
-    return outs, report, dt
+    return outs, report, dt, fabric
 
 
 def main():
@@ -70,6 +79,11 @@ def main():
                     help="launch through the distributed fabric with this "
                          "many local node agents (>1 engages repro.dist; "
                          "each node runs its own --backend)")
+    ap.add_argument("--transport", default="inproc",
+                    choices=("inproc", "socket"),
+                    help="the fabric's wire (with --nodes > 1): in-process "
+                         "queues, or length-prefixed frames over localhost "
+                         "TCP — one connection per node")
     ap.add_argument("--compare", action="store_true",
                     help="also time the array backend for contrast")
     ap.add_argument("--cache-dir", default=None,
@@ -91,7 +105,7 @@ def main():
     cache = CompileCache(cache_dir=args.cache_dir)
     inputs = np.random.default_rng(0).standard_normal(
         (args.n, 32)).astype(np.float32)
-    outs, report, dt = run_launch(args.backend, cache, args, inputs)
+    outs, report, dt, fabric = run_launch(args.backend, cache, args, inputs)
     r0 = report.records[0]
     print(f"launched {args.n:,} instances in {dt:.2f}s via {r0.strategy} "
           f"({args.n / dt:,.0f} inst/s, {report.waves} waves, "
@@ -104,12 +118,22 @@ def main():
                           for d in report.autoscale)
         print(f"autoscaled waves: {picks}")
     if args.nodes > 1:
-        print(f"per-node split across the fabric "
+        print(f"per-node split across the fabric over {args.transport} "
               f"({report.node_failures} node failures):")
         for nid, agg in sorted(nodes_rollup(report.records).items()):
+            cost = (fabric or {}).get(nid, {}).get("cost_per_instance")
+            reweight = (f", measured cost {cost * 1e6:.0f} us/inst"
+                        if cost else "")
             print(f"  {nid}: {agg['instances']:,} instances over "
-                  f"{agg['waves']} wave shards, "
-                  f"{agg['t_busy']:.2f}s busy")
+                  f"{agg['waves']} wave shards, {agg['t_busy']:.2f}s busy, "
+                  f"staged {agg['t_stage'] * 1e3:.1f} ms "
+                  f"({agg['t_stage_hidden'] * 1e3:.1f} ms hidden)"
+                  f"{reweight}")
+        st = stage_rollup(report.records)
+        print(f"staging overlap: {st['wall_s'] * 1e3:.1f} ms node-side "
+              f"stage wall, {st['hidden_frac']:.0%} hidden under "
+              f"execution (visible: "
+              f"{(st['wall_s'] - st['hidden_s']) * 1e3:.1f} ms)")
     print("\nper-wave launch records (per-level: sched -> node -> core):")
     print(table(report.records[:4], title=f"first waves of {args.n}"))
     if args.compare:
@@ -118,8 +142,8 @@ def main():
         # own warm-up regardless of which backend ran above
         run_launch("pipelined", cache, args, inputs)
         run_launch("array", cache, args, inputs)
-        _, _, dt_pipe = run_launch("pipelined", cache, args, inputs)
-        _, _, dt_array = run_launch("array", cache, args, inputs)
+        _, _, dt_pipe, _ = run_launch("pipelined", cache, args, inputs)
+        _, _, dt_array, _ = run_launch("array", cache, args, inputs)
         print(f"\nwarm backend contrast: pipelined {dt_pipe * 1e3:.1f} ms "
               f"vs array {dt_array * 1e3:.1f} ms "
               f"({dt_array / dt_pipe:.2f}x)")

@@ -53,6 +53,27 @@ def _pow2_at_most(x: int) -> int:
 
 
 @dataclass
+class Ewma:
+    """Exponentially-weighted moving average — the one smoothing shape the
+    repo's measured feedback loops share: the wave controller's per-size
+    cost track here, and the distributed fabric's per-node capacity
+    re-weighting (``NodeRegistry.observe_shard``). The first sample sets
+    the value outright (no zero-bias warmup), so a signal is actionable
+    after ONE measurement — which is what lets a slowed node's shards
+    shrink within a wave or two instead of an asymptote."""
+
+    alpha: float = 0.5
+    value: Optional[float] = None
+    n: int = 0
+
+    def update(self, x: float) -> float:
+        self.value = (x if self.value is None
+                      else self.alpha * x + (1.0 - self.alpha) * self.value)
+        self.n += 1
+        return self.value
+
+
+@dataclass
 class WaveDecision:
     """One controller step: what was chosen for a wave, and why."""
     wave: int
@@ -112,7 +133,7 @@ class WaveController:
         self._reason = "start"
         self._congested = 0
         self._grow_pressure = 0
-        self.cost: dict = {}          # wave size -> EMA cost per instance
+        self.cost: dict = {}          # wave size -> Ewma cost per instance
         self.ceiling = 2 * self.max_wave  # sizes >= a measured-bad size: off
         self.committed = False        # stop probing once a winner is clear
         self._probe_from: Optional[int] = None
@@ -161,8 +182,7 @@ class WaveController:
         cost = t_wave / n
         nominal = n == self.wave      # tail/absorbed waves are not ladder
         if nominal:                   # samples; don't let them steer
-            prev = self.cost.get(n)
-            self.cost[n] = cost if prev is None else 0.5 * (prev + cost)
+            self.cost.setdefault(n, Ewma(alpha=0.5)).update(cost)
         sched_frac = rec.t_schedule / t_wave
         drain_frac = max(rec.t_spawn - rec.t_first_result, 0.0) / t_wave
         late_first = (self.target_first_result_s is not None
@@ -195,15 +215,17 @@ class WaveController:
             # measurably cheaper per instance, else return and commit
             came_from = self._probe_from
             self._probe_from = None
-            if cost < 0.95 * self.cost.get(came_from, float("inf")):
+            came_cost = (self.cost[came_from].value
+                         if came_from in self.cost else float("inf"))
+            if cost < 0.95 * came_cost:
                 self._reason = f"adopt:{self.wave}"
                 return                # keep probing down next round
             self.wave = came_from
             self.committed = True
             self._reason = f"return:{came_from}"
             return
-        best_w = min(self.cost, key=self.cost.get)
-        if cost > 1.25 * self.cost[best_w] and best_w != self.wave:
+        best_w = min(self.cost, key=lambda w: self.cost[w].value)
+        if cost > 1.25 * self.cost[best_w].value and best_w != self.wave:
             # this size is measurably worse than one already measured:
             # go back there and stop exploring at or past this size
             self.ceiling = min(self.ceiling, self.wave)

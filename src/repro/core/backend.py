@@ -164,7 +164,13 @@ class LaunchBackend(Protocol):
     # per-node sub-results as they land (partial-wave harvest) and turns
     # ``failed()`` True when a node's heartbeat lease expires mid-wave.
     # They also advertise ``n_nodes`` (alive-node count) so the wave
-    # controller can size waves to the fabric's width.
+    # controller can size waves to the fabric's width. Scheduler<->node
+    # traffic below that surface is a pluggable wire protocol
+    # (``repro.dist.transport``: in-process queues or per-node TCP
+    # connections), shard payloads stream ahead of their submits so
+    # node-side staging overlaps the previous wave's execution, and the
+    # shard split is re-weighted by each node's measured speed — none of
+    # which the policy layer sees.
 
 
 # ----------------------------------------------------------------------

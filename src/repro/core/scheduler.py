@@ -1,15 +1,19 @@
-"""Deprecated scheduler aliases — the implementations moved to
-``repro.core.backend`` (the unified ``LaunchBackend`` protocol).
+"""DEPRECATED scheduler aliases — the implementations moved to
+``repro.core.backend`` (the unified ``LaunchBackend`` protocol) two PRs
+ago, and these shims are now in their retirement phase: constructing one
+emits a ``DeprecationWarning``. Every in-repo caller has been migrated
+to ``repro.core.backend.make_backend`` / the backend classes; out-of-repo
+seed-era imports keep working for now, warned.
 
-``SerialScheduler`` / ``ArrayScheduler`` are kept as thin subclasses so
-seed-era imports keep working. New code should construct backends via
-``repro.core.backend.make_backend``. Note the old ``ArrayScheduler._cache``
-dict keyed by ``id(fn)`` is gone: ``id`` is reused after garbage
-collection, which could silently serve a stale executable for a different
-function. Compilation is now keyed by content fingerprint in the shared
-persistent ``CompileCache`` (see ``repro.core.compile_cache``).
+Note the old ``ArrayScheduler._cache`` dict keyed by ``id(fn)`` is gone:
+``id`` is reused after garbage collection, which could silently serve a
+stale executable for a different function. Compilation is keyed by
+content fingerprint in the shared persistent ``CompileCache`` (see
+``repro.core.compile_cache``).
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.core.backend import (ArrayBackend, LaunchBackend,  # noqa: F401
                                 PipelinedBackend, SerialBackend,
@@ -17,11 +21,27 @@ from repro.core.backend import (ArrayBackend, LaunchBackend,  # noqa: F401
 
 
 class SerialScheduler(SerialBackend):
-    """Per-instance compile + dispatch (VM-style baseline)."""
+    """Deprecated alias of ``SerialBackend`` — use
+    ``make_backend("serial")``."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro.core.scheduler.SerialScheduler is deprecated; build "
+            "backends via repro.core.backend.make_backend('serial')",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)
 
 
 class ArrayScheduler(ArrayBackend):
-    """One array job: compile once, dispatch all N lanes at once."""
+    """Deprecated alias of ``ArrayBackend`` — use
+    ``make_backend("array")``."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro.core.scheduler.ArrayScheduler is deprecated; build "
+            "backends via repro.core.backend.make_backend('array')",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)
 
     @property
     def _cache(self) -> dict:

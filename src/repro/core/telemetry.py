@@ -19,7 +19,11 @@ Distributed waves (``repro.dist``) add the top of the tree: ``n_nodes``
 counts the hosts a wave was sharded over and ``node_failure`` marks an
 attempt stranded by a heartbeat-expired node. Per-shard detail lands in
 ``extra["node_records"]`` and rolls up via ``LaunchRecord.nodes()`` (one
-wave) and ``nodes_rollup()`` (a whole report).
+wave) and ``nodes_rollup()`` (a whole report). A distributed wave's
+``t_stage`` is its VISIBLE staging only — node-side staging overlapped
+with the previous wave's execution is hidden by design, and the full
+wall/hidden split rides in ``extra["stage"]`` (per wave) and
+``stage_rollup()`` (a whole report).
 """
 from __future__ import annotations
 
@@ -87,6 +91,9 @@ class LaunchRecord:
             out[nr["node"]] = {"n": nr.get("n", 0),
                                "span": (nr.get("lo"), nr.get("hi")),
                                "t_wave": nr.get("t_wave", 0.0),
+                               "t_stage": nr.get("t_stage", 0.0),
+                               "stage_hidden_s": nr.get("stage_hidden_s",
+                                                        0.0),
                                "attempts": nr.get("attempts", 1),
                                "compile_source": nr.get("compile_source")}
         return out
@@ -106,17 +113,35 @@ HEADER = ("strategy,n,t_schedule,t_stage,t_spawn,t_first_result,"
 
 def nodes_rollup(records: List[LaunchRecord]) -> Dict[str, dict]:
     """Aggregate the per-node shard detail of many wave records: node id
-    -> waves served, instances, busy seconds — the fabric-level view the
-    ``fig_dist`` benchmark and ``examples/massive_launch.py`` print."""
+    -> waves served, instances, busy seconds, staging wall + hidden
+    seconds — the fabric-level view the ``fig_dist`` benchmark and
+    ``examples/massive_launch.py`` print."""
     out: Dict[str, dict] = {}
     for r in records:
         for nid, d in r.nodes().items():
             agg = out.setdefault(nid, {"waves": 0, "instances": 0,
-                                       "t_busy": 0.0})
+                                       "t_busy": 0.0, "t_stage": 0.0,
+                                       "t_stage_hidden": 0.0})
             agg["waves"] += 1
             agg["instances"] += d["n"]
             agg["t_busy"] += d["t_wave"]
+            agg["t_stage"] += d.get("t_stage", 0.0)
+            agg["t_stage_hidden"] += d.get("stage_hidden_s", 0.0)
     return out
+
+
+def stage_rollup(records: List[LaunchRecord]) -> Dict[str, float]:
+    """Whole-report staging overlap: total node-side stage wall, the
+    part hidden under execution, and the hidden fraction (the measured
+    form of the paper's 'copy time overlapped with launch')."""
+    wall = hidden = 0.0
+    for r in records:
+        st = r.extra.get("stage")
+        if st:
+            wall += st.get("wall_s", 0.0)
+            hidden += st.get("hidden_s", 0.0)
+    return {"wall_s": wall, "hidden_s": hidden,
+            "hidden_frac": hidden / wall if wall > 0 else 0.0}
 
 
 class Timer:

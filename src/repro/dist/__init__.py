@@ -7,22 +7,39 @@ backend, and compile cache), nodes report liveness to a registry, and a
 node lost mid-wave feeds its work back through the policy layer's
 barrier-free speculative re-dispatch.
 
-  ``registry``  NodeRegistry: membership, heartbeat leases,
-                alive/suspect/dead health, elastic join/leave.
-  ``node``      NodeAgent: a worker loop owning a device subset —
-                in-process threads by default (CI needs no cluster),
-                real ``multiprocessing`` workers optionally.
-  ``backend``   DistributedBackend: the ``LaunchBackend`` protocol over
-                the fabric — capacity-weighted wave sharding, composite
-                wave handles with partial-wave harvest, failover.
+  ``transport``  the wire protocol (SUBMIT/RESULT/HEARTBEAT/STAGE/LEAVE
+                 frames, msgpack-or-pickle payloads, explicit size caps)
+                 over two carriers: ``InprocTransport`` (queue pairs)
+                 and ``SocketTransport`` (length-prefixed frames over
+                 localhost TCP, one connection per node).
+  ``registry``   NodeRegistry: membership, heartbeat leases,
+                 alive/suspect/dead health, elastic join/leave, and the
+                 per-node measured-cost EWMA behind capacity
+                 re-weighting. A dropped connection is condemned via
+                 ``expire`` (dead connection ≡ lease expiry).
+  ``node``       NodeAgent: one agent class across the host x transport
+                 matrix (worker threads by default, real
+                 ``multiprocessing`` workers via ``host="process"``),
+                 speaking only the protocol; shard payloads stream ahead
+                 in STAGE frames and stage node-side OVERLAPPED with the
+                 previous wave's execution.
+  ``backend``    DistributedBackend: the ``LaunchBackend`` protocol over
+                 the fabric — measured-capacity wave sharding, composite
+                 wave handles with partial-wave harvest, failover.
 """
 from repro.dist.backend import DistributedBackend, NoAliveNodesError
 from repro.dist.node import NodeAgent, ProcessNodeAgent, spawn_local_nodes
 from repro.dist.registry import (ALIVE, DEAD, LEFT, SUSPECT, NodeInfo,
                                  NodeRegistry)
+from repro.dist.transport import (ChannelClosed, Frame, InprocTransport,
+                                  PayloadTooLarge, ProtocolError,
+                                  SocketTransport, TransportError,
+                                  make_transport)
 
 __all__ = [
     "DistributedBackend", "NoAliveNodesError",
     "NodeAgent", "ProcessNodeAgent", "spawn_local_nodes",
     "NodeRegistry", "NodeInfo", "ALIVE", "SUSPECT", "DEAD", "LEFT",
+    "Frame", "InprocTransport", "SocketTransport", "make_transport",
+    "TransportError", "ChannelClosed", "PayloadTooLarge", "ProtocolError",
 ]

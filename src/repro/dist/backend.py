@@ -22,6 +22,24 @@ Failure is a first-class path, layered twice:
 Because ``DistributedBackend`` speaks the same protocol as every other
 backend, ``LLMapReduce``, ``WaveController(wave_size="auto")``,
 telemetry, and ``ServeEngine`` run over the fabric with zero API change.
+
+Under the LaunchBackend protocol sit two more measured mechanisms:
+
+  * **overlapped per-node staging** — each shard's payload travels in a
+    STAGE frame through the agent's async outbox ahead of its (tiny)
+    SUBMIT, and the node's receiver thread materializes it through a
+    ``core.staging.Stager`` while the worker executes the previous wave;
+    the per-shard stage wall and its hidden fraction come back in the
+    RESULT record, aggregate into the wave's ``t_stage`` (visible stage
+    only — the hidden part is, by definition, not on the critical path)
+    and ``extra["stage"]``;
+  * **measured capacity re-weighting** — each completed shard's wall
+    feeds ``NodeRegistry.observe_shard`` (a per-node cost-per-instance
+    EWMA, the same smoothing shape the wave controller runs), and
+    ``dispatch`` scales every node's declared capacity by its measured
+    speed, so a slow node automatically receives smaller shards on the
+    very next wave. ``transport="socket"`` swaps the queue carrier for
+    length-prefixed frames over localhost TCP with one switch.
 """
 from __future__ import annotations
 
@@ -35,6 +53,7 @@ from repro.core.telemetry import LaunchRecord, Timer
 from repro.core.backend import WaveHandle, concat_outputs
 from repro.dist.node import ShardTask, spawn_local_nodes
 from repro.dist.registry import DEAD, LEFT, NodeInfo, NodeRegistry
+from repro.dist.transport import make_transport
 
 
 class NoAliveNodesError(RuntimeError):
@@ -47,10 +66,12 @@ def _slice_tree(chunk: Any, lo: int, hi: int) -> Any:
     return jax.tree_util.tree_map(lambda x: x[lo:hi], chunk)
 
 
-def split_by_capacity(n: int, capacities: List[int]) -> List[int]:
+def split_by_capacity(n: int, capacities: List[float]) -> List[int]:
     """Largest-remainder split of ``n`` tasks over capacity weights —
     sizes sum to exactly ``n``; zero-sized shards are legal (a wave
-    smaller than the fleet skips the lightest nodes)."""
+    smaller than the fleet skips the lightest nodes). Weights may be
+    fractional: measured re-weighting scales declared capacities by
+    observed per-node speed."""
     total = sum(capacities)
     if total <= 0:
         raise ValueError("total capacity must be positive")
@@ -156,16 +177,45 @@ class DistWaveHandle(WaveHandle):
         self.out = concat_outputs(
             [s.out for s in sorted(self.shards, key=lambda s: s.lo)])
         now = time.perf_counter()
-        self.rec.t_spawn = now - self.t0
+        wall = now - self.t0
         self.rec.t_first_result = (self._t_first if self._t_first is not None
-                                   else self.rec.t_spawn)
+                                   else wall)
         self.rec.extra["node_records"] = [
             {"node": s.node_id, "n": s.hi - s.lo, "lo": s.lo, "hi": s.hi,
              "t_wave": s.t_done - s.t_submit, "attempts": s.attempts,
              "t_schedule": s.rec.t_schedule if s.rec else 0.0,
+             "t_stage": s.rec.t_stage if s.rec else 0.0,
+             "stage_hidden_s": (s.rec.extra.get("stage", {}).get("hidden_s",
+                                                                 0.0)
+                                if s.rec else 0.0),
              "compile_source": (s.rec.extra.get("compile_source")
                                 if s.rec else None)}
             for s in self.shards]
+        # staging telemetry: the wave's t_stage is the VISIBLE stage only
+        # (stage wall not hidden under execution — the hidden part is, by
+        # definition, off the critical path); nodes stage in parallel, so
+        # visible stage is a max, totals go to extra. t_spawn is the
+        # execution remainder, keeping total == measured wall.
+        stage_wall = sum(nr["t_stage"]
+                         for nr in self.rec.extra["node_records"])
+        stage_hidden = sum(nr["stage_hidden_s"]
+                           for nr in self.rec.extra["node_records"])
+        visible = max((nr["t_stage"] - nr["stage_hidden_s"]
+                       for nr in self.rec.extra["node_records"]),
+                      default=0.0)
+        self.rec.t_stage = max(visible, 0.0)
+        self.rec.t_spawn = max(wall - self.rec.t_stage, 0.0)
+        if stage_wall > 0:
+            self.rec.extra["stage"] = {
+                "wall_s": stage_wall, "hidden_s": stage_hidden,
+                "hidden_frac": stage_hidden / stage_wall}
+        # measured capacity re-weighting: feed clean shards' walls into
+        # the registry's per-node cost EWMA (failed-over shards carry
+        # detection + requeue latency, not node speed)
+        for s in self.shards:
+            if s.attempts == 1 and s.rec is not None:
+                self.fabric.registry.observe_shard(
+                    s.node_id, s.hi - s.lo, s.t_done - s.t_submit)
         # wave-level compile source = the slowest tier any node paid
         sources = {nr["compile_source"]
                    for nr in self.rec.extra["node_records"]}
@@ -229,18 +279,32 @@ class DistributedBackend:
                  mesh: Optional[jax.sharding.Mesh] = None,
                  node_backend: str = "array",
                  node_mode: str = "thread",
+                 transport: Any = "inproc",
                  capacities: Optional[List[int]] = None,
                  depth: int = 2,
                  heartbeat_timeout_s: float = 0.5,
                  heartbeat_s: Optional[float] = None,
                  inner_lanes: Optional[int] = None,
+                 overlap_staging: bool = True,
+                 reweight: bool = True,
+                 min_weight_frac: float = 0.05,
                  target_first_result_s: Optional[float] = None):
         """Pass ready ``nodes`` (agents already registered with
         ``registry``) or let the backend spawn ``n_nodes`` local agents
         (thread mode by default; ``node_mode="process"`` for real
-        multiprocessing workers). ``cache=None`` gives every spawned node
-        its OWN ``CompileCache`` (the paper's node-local staging disk); an
-        explicit cache is shared by all thread nodes.
+        multiprocessing workers). ``transport`` is the wire the fabric
+        speaks: ``"inproc"`` (queue pairs), ``"socket"`` (length-prefixed
+        frames over localhost TCP, one connection per node), or a ready
+        transport instance shared with externally-built agents.
+        ``cache=None`` gives every spawned node its OWN ``CompileCache``
+        (the paper's node-local staging disk); an explicit cache is
+        shared by all thread nodes. ``overlap_staging=False`` disables
+        the STAGE-ahead path (payloads ride inside SUBMIT and stage on
+        the worker's critical path — the unoverlapped baseline the
+        ``fig_dist`` benchmark contrasts). ``reweight=False`` freezes the
+        shard split at declared capacities; on, each node's weight is
+        scaled by its measured speed, floored at ``min_weight_frac`` of
+        its declared share (a slow node shrinks, it is never starved).
         ``target_first_result_s`` rides along to any wave controller
         built over this backend (the serve-side SLO knob)."""
         from repro.core.compile_cache import default_cache
@@ -251,13 +315,18 @@ class DistributedBackend:
         self.cache = cache if cache is not None else default_cache()
         self.registry = registry if registry is not None else NodeRegistry(
             heartbeat_timeout_s=heartbeat_timeout_s)
+        self.transport, self._owned_transport = make_transport(transport)
         self.inner_lanes = inner_lanes
+        self.overlap_staging = overlap_staging
+        self.reweight = reweight
+        self.min_weight_frac = min_weight_frac
         self.target_first_result_s = target_first_result_s
         self.max_in_flight = max(1, depth)
         self._owned: List[Any] = []
         self._rr = 0
         if nodes is None:
-            kw: dict = {"backend_kind": node_backend}
+            kw: dict = {"backend_kind": node_backend,
+                        "overlap_staging": overlap_staging}
             if heartbeat_s is not None:
                 kw["heartbeat_s"] = heartbeat_s
             if cache is not None:
@@ -271,7 +340,7 @@ class DistributedBackend:
                     kw["cache_dir"] = cache.cache_dir
             nodes = spawn_local_nodes(n_nodes or 2, self.registry,
                                       mode=node_mode, capacities=capacities,
-                                      **kw)
+                                      transport=self.transport, **kw)
             self._owned = list(nodes)
         self.agents: Dict[str, Any] = {a.node_id: a for a in nodes}
 
@@ -326,11 +395,30 @@ class DistributedBackend:
                                   donate_argnums=donate_argnums,
                                   extras=extras)
 
+    def _weights(self, infos: List[NodeInfo]) -> List[float]:
+        """Effective shard weights: declared capacity scaled by measured
+        speed (fastest node's cost EWMA = 1.0), floored at
+        ``min_weight_frac`` of the declared share so a slow node shrinks
+        without being starved of the measurements it needs to recover."""
+        if not self.reweight:
+            return [float(i.capacity) for i in infos]
+        costs = [i.cost.value if i.cost is not None else None
+                 for i in infos]
+        known = [c for c in costs if c]
+        if not known:
+            return [float(i.capacity) for i in infos]
+        fastest = min(known)
+        return [max(i.capacity * (fastest / c if c else 1.0),
+                    self.min_weight_frac * i.capacity)
+                for i, c in zip(infos, costs)]
+
     def dispatch(self, fn: Callable, chunk: Any, n: int,
                  inner_lanes: Optional[int] = None) -> DistWaveHandle:
         """ONE scheduler interaction: shard the wave over every alive node
-        weighted by capacity and enqueue all shards; returns immediately
-        with a composite handle (sub-results are futures on their nodes)."""
+        weighted by (measured) capacity and enqueue all shards; returns
+        immediately with a composite handle (sub-results are futures on
+        their nodes; payloads stream to the nodes through each agent's
+        async outbox while earlier waves execute)."""
         lanes = self.inner_lanes if inner_lanes is None else inner_lanes
         rec = LaunchRecord(self.name, n)
         t = Timer()
@@ -339,7 +427,8 @@ class DistributedBackend:
             raise NoAliveNodesError(
                 "dispatch with no alive nodes "
                 f"(registry: {self.registry.rollup()})")
-        sizes = split_by_capacity(n, [i.capacity for i in infos])
+        weights = self._weights(infos)
+        sizes = split_by_capacity(n, weights)
         shards: List[_Shard] = []
         lo = 0
         for info, w in zip(infos, sizes):
@@ -355,6 +444,9 @@ class DistributedBackend:
         rec.extra["n_nodes"] = len(shards)
         rec.extra["shards"] = [{"node": s.node_id, "lo": s.lo, "hi": s.hi}
                                for s in shards]
+        if any(abs(w - i.capacity) > 1e-9 for i, w in zip(infos, weights)):
+            rec.extra["shard_weights"] = {      # measured re-weighting hit
+                i.node_id: round(w, 4) for i, w in zip(infos, weights)}
         return DistWaveHandle(self, fn, shards, rec, time.perf_counter(),
                               inner_lanes=lanes)
 
@@ -364,10 +456,13 @@ class DistributedBackend:
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
         """Gracefully stop every agent this backend spawned (externally
-        provided nodes are the caller's to stop)."""
+        provided nodes are the caller's to stop), then the transport it
+        owns (an externally shared transport outlives the backend)."""
         for agent in self._owned:
             if agent.alive:
                 agent.stop()
+        if self._owned_transport:
+            self.transport.close()
 
     def __enter__(self) -> "DistributedBackend":
         return self

@@ -1,31 +1,40 @@
-"""NodeAgent: one node of the launch fabric — a worker loop that owns a
-device subset, runs its own local ``LaunchBackend`` over a per-node
-``CompileCache``, and reports liveness to the ``NodeRegistry``.
+"""NodeAgent: one node of the launch fabric, speaking ONLY the wire
+protocol (``repro.dist.transport``) to its worker.
 
-Two host models share one interface (``submit / kill / stop``):
+ONE agent class covers the whole host x transport matrix. The scheduler
+side (this class) is a protocol pump: SUBMIT/STAGE frames go out through
+an async outbox (so ``dispatch`` returns before payloads serialize — the
+transfer overlaps the previous wave's execution), HEARTBEAT frames renew
+the registry lease, RESULT frames resolve ``ShardTask`` futures, LEAVE
+frames deregister. The node side (``_worker_loop``) is the same function
+everywhere: a receiver thread drains the channel — staging STAGE
+payloads through a ``core.staging.Stager`` WHILE the worker thread
+executes the previous shard (overlapped per-node staging, with the
+hidden/visible split measured against the worker's busy clock) — and a
+heartbeat thread beats until the queue drains.
 
-  ``NodeAgent``         in-process threads (the CI default): a heartbeat
-                        thread renews the registry lease while a worker
-                        thread drains the node's shard queue through its
-                        local backend. Multi-host is SIMULATED — nodes
-                        share the machine but nothing else (own backend,
-                        own cache, own queue, own lease), which is exactly
-                        the contract the distributed backend and the
-                        policy layer program against.
-  ``ProcessNodeAgent``  real ``multiprocessing`` workers (spawn): each
-                        node is a separate Python process with its own
-                        JAX runtime — heartbeats and results travel over
-                        queues, and ``kill()`` is a hard SIGTERM, so a
-                        lost node is indistinguishable from a crashed
-                        host. Combine with
-                        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-                        to give every node process a fake-device mesh.
+  host="thread"    worker threads in this process (the CI default):
+                   multi-host is SIMULATED — nodes share the machine but
+                   nothing else (own backend, own cache, own channel,
+                   own lease).
+  host="process"   real ``multiprocessing`` spawn workers: a separate
+                   Python process with its own JAX runtime; ``kill()``
+                   is a hard SIGTERM, so a lost node is indistinguishable
+                   from a crashed host.
+
+  transport=InprocTransport   queue pairs (by-reference in one process,
+                              mp queues across the spawn boundary).
+  transport=SocketTransport   length-prefixed frames over localhost TCP,
+                              one connection per node; everything
+                              crossing the channel is serialized and a
+                              dead peer is a dropped connection
+                              (condemned via ``registry.expire``).
 
 Death semantics are the point: ``kill()`` models a crashed node — the
 heartbeat stops, queued shards never run, and a shard computed but not
 yet reported is dropped (the fabric must recover it via re-dispatch, and
 does: results stay exactly-once because a dead node reports nothing).
-``stop()`` is the graceful leave — drain the queue, deregister, exit.
+``stop()`` is the graceful leave — drain, send LEAVE, deregister.
 """
 from __future__ import annotations
 
@@ -38,7 +47,10 @@ from typing import Any, Callable, List, Optional
 
 import numpy as np
 
-from repro.dist.registry import NodeRegistry
+from repro.dist.registry import LEFT, NodeRegistry
+from repro.dist.transport import (HEARTBEAT, LEAVE, RESULT, STAGE, SUBMIT,
+                                  InprocTransport, PayloadTooLarge,
+                                  TransportError, open_worker_channel)
 
 
 def _node_cache_dir(node_id: str) -> str:
@@ -52,7 +64,8 @@ def _node_cache_dir(node_id: str) -> str:
 
 
 class ShardTask:
-    """One shard of one wave, in flight on one node."""
+    """One shard of one wave, in flight on one node (a scheduler-side
+    future resolved by the node's RESULT frame)."""
 
     _ids = itertools.count()
 
@@ -74,17 +87,27 @@ class ShardTask:
         return self._done.is_set()
 
     def set_result(self, out: Any, rec: Any) -> None:
+        if self._done.is_set():
+            return
         self.out, self.rec = out, rec
         self._done.set()
 
     def set_error(self, err: BaseException) -> None:
+        if self._done.is_set():
+            return
         self.err = err
         self._done.set()
 
     def cancel(self) -> None:
-        """Best-effort: a not-yet-started shard is skipped by the worker;
-        a running one completes but nobody reads it (tasks are idempotent)."""
+        """Best-effort: a shard not yet on the wire is never sent; an
+        in-process host skips it at execution time; a remote process may
+        still compute a result nobody reads (tasks are idempotent)."""
         self.cancelled = True
+        cb = self._on_cancel
+        if cb is not None:
+            cb(self.task_id)
+
+    _on_cancel: Optional[Callable] = None
 
 
 def _lane_kwargs(backend, n: int, inner_lanes: Optional[int]) -> dict:
@@ -97,49 +120,323 @@ def _lane_kwargs(backend, n: int, inner_lanes: Optional[int]) -> dict:
     return {}
 
 
-class NodeAgent:
-    """Thread-hosted node: heartbeat loop + shard-queue worker loop."""
+class _WorkerCtl:
+    """Worker-side switchboard: kill/stop/pause flags plus the busy clock
+    the ``Stager`` attributes staging overlap against. Thread-hosted
+    agents SHARE this object with their worker (the kill flag is how a
+    thread 'crashes'); a process host's ctl lives in the child, where
+    kill is a real SIGTERM instead."""
 
-    def __init__(self, node_id: str, registry: NodeRegistry,
-                 capacity: int = 1,
+    def __init__(self):
+        self.killed = threading.Event()
+        self.stopping = threading.Event()
+        self.paused = threading.Event()
+        self.throttle_s = 0.0    # test/bench affordance: per-shard slowdown
+        # task ids cancelled scheduler-side: an in-process worker (thread
+        # hosts share this object over BOTH wires) skips them before
+        # executing — a process host's child has its own empty set, so
+        # remote cancellation stays best-effort
+        self.cancelled: set = set()
+        self._busy_lock = threading.Lock()
+        self._busy_total = 0.0
+        self._busy_since: Optional[float] = None
+
+    def busy_begin(self) -> None:
+        with self._busy_lock:
+            self._busy_since = time.perf_counter()
+
+    def busy_end(self) -> None:
+        with self._busy_lock:
+            if self._busy_since is not None:
+                self._busy_total += time.perf_counter() - self._busy_since
+                self._busy_since = None
+
+    def busy_clock(self) -> float:
+        """Cumulative seconds the worker has spent executing shards."""
+        with self._busy_lock:
+            total = self._busy_total
+            if self._busy_since is not None:
+                total += time.perf_counter() - self._busy_since
+            return total
+
+
+def _run_shard(node_id: str, backend, stager, ctl: _WorkerCtl, channel,
+               item: dict, numpy_out: bool) -> None:
+    """Execute one SUBMIT frame's shard and report its RESULT frame."""
+    task_id = item["task_id"]
+    try:
+        if task_id in ctl.cancelled:
+            # cancelled scheduler-side (failover / abandoned race loser):
+            # skip the compute, but consume the staged payload so the
+            # stager never leaks an orphaned chunk
+            if item.get("staged"):
+                try:
+                    stager.take(task_id)
+                except KeyError:
+                    pass
+            return
+        if item.get("staged"):
+            chunk, sinfo = stager.take(task_id)
+        else:
+            chunk, sinfo = stager.stage_inline(item["chunk"])
+        ctl.busy_begin()
+        try:
+            if ctl.throttle_s:
+                time.sleep(ctl.throttle_s)
+            kw = _lane_kwargs(backend, item["n"], item.get("inner_lanes"))
+            out, rec = backend.dispatch(item["fn"], chunk, item["n"],
+                                        **kw).result()
+        finally:
+            ctl.busy_end()
+        if ctl.killed.is_set():       # died mid-compute: result is lost
+            return
+        rec.extra["node_id"] = node_id
+        rec.t_stage = sinfo["t_stage"]
+        rec.extra["stage"] = sinfo
+        if numpy_out:
+            import jax
+            out = jax.tree_util.tree_map(np.asarray, out)
+        channel.send(RESULT, {"task_id": task_id, "ok": True,
+                              "out": out, "rec": rec})
+    except PayloadTooLarge as e:
+        # the RESULT itself is too big for the wire: the scheduler must
+        # still hear SOMETHING, or the shard future hangs forever — send
+        # the (tiny) error form instead
+        try:
+            channel.send(RESULT, {"task_id": task_id, "ok": False,
+                                  "err": repr(e)})
+        except TransportError:
+            pass
+    except TransportError:
+        return
+    except BaseException as e:  # noqa: BLE001 — reported to the scheduler
+        if ctl.killed.is_set():
+            return
+        try:
+            channel.send(RESULT, {"task_id": task_id, "ok": False,
+                                  "err": repr(e)})
+        except TransportError:
+            pass
+
+
+def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
+                 heartbeat_s: float,
                  backend: Optional[Any] = None,
                  backend_kind: str = "array",
                  cache: Optional[Any] = None,
+                 cache_dir: Optional[str] = None,
                  devices: Optional[list] = None,
-                 heartbeat_s: float = 0.02,
-                 start: bool = True):
-        # local imports: a NodeAgent is constructible before jax config
-        # (mirrors a node booting before it joins the mesh)
+                 numpy_out: bool = False) -> None:
+    """The node side, identical for every host x transport combination:
+    heartbeat thread (beats BEFORE the heavy imports — booting is not
+    being dead), receiver thread (stages STAGE payloads overlapped with
+    execution, queues SUBMITs, honours LEAVE), worker loop (execute +
+    report)."""
+    workq: "queue.Queue" = queue.Queue()
+
+    def hb_loop() -> None:
+        while not ctl.killed.is_set():
+            # a graceful leave keeps beating until the worker has DRAINED
+            # (unfinished_tasks covers the item the worker already popped:
+            # a long final shard must not expire the lease — deregister
+            # is never a failure)
+            if ctl.stopping.is_set() and workq.unfinished_tasks == 0:
+                return
+            try:
+                channel.send(HEARTBEAT, node_id)
+            except TransportError:
+                return
+            time.sleep(heartbeat_s)
+
+    threading.Thread(target=hb_loop, daemon=True,
+                     name=f"node-{node_id}-hb").start()
+
+    # heavy imports after heartbeats start (fresh JAX runtime in a
+    # process-hosted node)
+    from repro.core.staging import Stager
+    if backend is None:
         from repro.core.backend import make_backend
         from repro.core.compile_cache import CompileCache
+        mesh = None
+        if devices and len(devices) > 1:
+            import jax
+            mesh = jax.sharding.Mesh(np.asarray(devices), ("data",))
+        backend = make_backend(
+            backend_kind, mesh=mesh,
+            cache=cache if cache is not None else CompileCache(
+                cache_dir=cache_dir or _node_cache_dir(node_id)))
+    stager = Stager(busy_clock=ctl.busy_clock)
 
+    def recv_loop() -> None:
+        while not ctl.killed.is_set():
+            try:
+                frame = channel.recv(timeout=heartbeat_s)
+            except TransportError:
+                # peer gone: nothing more will arrive — drain and exit
+                ctl.stopping.set()
+                workq.put(None)
+                return
+            except Exception:  # noqa: BLE001 — poisoned frame
+                # a frame that fails to DECODE (e.g. a fn that pickled on
+                # the scheduler but has no importable home here) means a
+                # SUBMIT this node can never run: dying loudly — stop
+                # beating, let the lease expire — hands the shard to a
+                # surviving node; wedging alive would hang it forever
+                ctl.killed.set()
+                return
+            if frame is None:
+                continue
+            if frame.kind == STAGE:
+                # staged HERE, in the receiver thread, while the worker
+                # thread executes the previous shard: this is the overlap
+                p = frame.payload
+                stager.stage(p["task_id"], p["chunk"])
+            elif frame.kind == SUBMIT:
+                workq.put(frame.payload)
+            elif frame.kind == LEAVE:
+                ctl.stopping.set()
+                workq.put(None)
+                return
+
+    threading.Thread(target=recv_loop, daemon=True,
+                     name=f"node-{node_id}-recv").start()
+
+    while not ctl.killed.is_set():
+        if ctl.paused.is_set():
+            time.sleep(heartbeat_s / 2)
+            continue
+        try:
+            item = workq.get(timeout=heartbeat_s)
+        except queue.Empty:
+            continue
+        try:
+            if item is None:          # drained past the LEAVE sentinel
+                break
+            _run_shard(node_id, backend, stager, ctl, channel, item,
+                       numpy_out)
+        finally:
+            workq.task_done()
+    if ctl.stopping.is_set() and not ctl.killed.is_set():
+        try:
+            channel.send(LEAVE, node_id)
+        except TransportError:
+            pass
+        channel.close()
+
+
+def _process_main(node_id: str, endpoint: tuple, heartbeat_s: float,
+                  backend_kind: str, cache_dir: str) -> None:
+    """Entry point of a process-hosted node: connect first (cheap), beat
+    while jax imports, then serve shards until LEAVE or SIGTERM."""
+    channel = open_worker_channel(endpoint)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+    _worker_loop(node_id, channel, _WorkerCtl(), heartbeat_s,
+                 backend_kind=backend_kind, cache_dir=cache_dir,
+                 numpy_out=True)
+
+
+class NodeAgent:
+    """Scheduler-side handle of one node: owns the channel, the pending
+    shard futures, and the node's lifecycle. ``host`` picks where the
+    worker runs ("thread" | "process"); ``transport`` how frames travel
+    (an ``InprocTransport``/``SocketTransport`` instance — every agent of
+    a fabric may share one transport; each gets its own channel)."""
+
+    def __init__(self, node_id: str, registry: NodeRegistry,
+                 capacity: int = 1,
+                 transport: Optional[Any] = None,
+                 host: str = "thread",
+                 backend: Optional[Any] = None,
+                 backend_kind: str = "array",
+                 cache: Optional[Any] = None,
+                 cache_dir: Optional[str] = None,
+                 devices: Optional[list] = None,
+                 heartbeat_s: Optional[float] = None,
+                 overlap_staging: bool = True,
+                 start: bool = True):
+        if host not in ("thread", "process"):
+            raise ValueError(f"unknown node host {host!r}; "
+                             f"choose 'thread' or 'process'")
         self.node_id = node_id
         self.registry = registry
         self.capacity = capacity
-        self.heartbeat_s = heartbeat_s
+        self.transport = transport if transport is not None \
+            else InprocTransport()
+        self.host = host
+        self.heartbeat_s = heartbeat_s if heartbeat_s is not None \
+            else (0.02 if host == "thread" else 0.05)
+        self.overlap_staging = overlap_staging
         self.devices = devices
-        if backend is None:
-            mesh = None
-            if devices and len(devices) > 1:
-                import jax
-                mesh = jax.sharding.Mesh(np.asarray(devices), ("data",))
-            backend = make_backend(
-                backend_kind, mesh=mesh,
-                cache=cache if cache is not None
-                else CompileCache(cache_dir=_node_cache_dir(node_id)))
-        self.backend = backend
-        self._q: "queue.Queue[ShardTask]" = queue.Queue()
         self._killed = False
         self._stopping = False
-        self._paused = False
+        self._pending: dict = {}
+        self._lock = threading.Lock()
+        self._outbox: "queue.Queue" = queue.Queue()
         self._threads: List[threading.Thread] = []
+        self._ch = None
+        self._proc = None
+        self._ctl: Optional[_WorkerCtl] = None
+        # everything crossing a socket (or a process boundary) must be
+        # serialized; thread+inproc passes by reference
+        self._numpy_out = (host == "process"
+                           or getattr(self.transport, "name", "") == "socket")
+        if host == "thread":
+            # local imports: a NodeAgent is constructible before jax
+            # config (mirrors a node booting before it joins the mesh)
+            if backend is None:
+                from repro.core.backend import make_backend
+                from repro.core.compile_cache import CompileCache
+                mesh = None
+                if devices and len(devices) > 1:
+                    import jax
+                    mesh = jax.sharding.Mesh(np.asarray(devices), ("data",))
+                backend = make_backend(
+                    backend_kind, mesh=mesh,
+                    cache=cache if cache is not None else CompileCache(
+                        cache_dir=cache_dir or _node_cache_dir(node_id)))
+            self.backend = backend
+            self._ctl = _WorkerCtl()
+            self._port = self.transport.create(node_id)
+        else:
+            import multiprocessing as mp
+            ctx = mp.get_context("spawn")
+            self._port = self.transport.create(
+                node_id,
+                ctx=ctx if isinstance(self.transport, InprocTransport)
+                else None)
+            if cache_dir is None:
+                cache_dir = (cache.cache_dir if cache is not None
+                             else _node_cache_dir(node_id))
+            self._proc = ctx.Process(
+                target=_process_main,
+                args=(node_id, self._port.endpoint, self.heartbeat_s,
+                      backend_kind, cache_dir),
+                daemon=True)
         if start:
             self.start()
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "NodeAgent":
         self.registry.register(self.node_id, self.capacity)
-        for target in (self._hb_loop, self._work_loop):
+        if self.host == "thread":
+            endpoint = self._port.endpoint
+
+            def thread_main():
+                channel = open_worker_channel(endpoint)
+                _worker_loop(self.node_id, channel, self._ctl,
+                             self.heartbeat_s, backend=self.backend,
+                             numpy_out=self._numpy_out)
+
+            t = threading.Thread(target=thread_main, daemon=True,
+                                 name=f"node-{self.node_id}-worker")
+            t.start()
+            self._threads.append(t)
+        else:
+            self._proc.start()
+        # blocks, for sockets, until the worker has dialled in
+        self._ch = self._port.driver_channel()
+        for target in (self._pump, self._send_loop):
             t = threading.Thread(target=target, daemon=True,
                                  name=f"node-{self.node_id}-{target.__name__}")
             t.start()
@@ -149,263 +446,214 @@ class NodeAgent:
     def kill(self) -> None:
         """Abrupt node death: heartbeats stop NOW, queued shards never
         run, an in-flight shard's result is dropped. Detection is the
-        registry's job (lease expiry), not ours — dead nodes don't
-        announce themselves."""
+        registry's job (lease expiry — or, over sockets, the dropped
+        connection), not ours: dead nodes don't announce themselves."""
         self._killed = True
+        if self.host == "process":
+            if self._proc.is_alive():
+                self._proc.terminate()
+        else:
+            self._ctl.killed.set()
+        # the host is gone, and its connection goes with it (over TCP the
+        # FIN is physical reality, not an announcement)
+        if self._ch is not None:
+            self._ch.close()
+        self._outbox.put(None)
 
-    def stop(self, timeout: float = 5.0) -> None:
-        """Graceful leave: drain the queue, deregister, exit."""
+    def stop(self, timeout: float = 10.0) -> None:
+        """Graceful leave: drain the queue, send LEAVE, deregister."""
         self._stopping = True
+        self._outbox.put((LEAVE, self.node_id, None))
+        deadline = time.monotonic() + timeout
+        if self.host == "process":
+            self._proc.join(timeout)
+        while (time.monotonic() < deadline
+               and self.registry.nodes.get(self.node_id) is not None
+               and self.registry.nodes[self.node_id].state != LEFT):
+            time.sleep(self.heartbeat_s / 2)
+        # belt and braces: a leave must never read as a failure, even if
+        # the LEAVE frame raced a teardown
+        if (self.node_id in self.registry.nodes
+                and self.registry.nodes[self.node_id].state != LEFT):
+            self.registry.deregister(self.node_id)
+        self._outbox.put(None)
+        if self._ch is not None:
+            self._ch.close()
         for t in self._threads:
-            t.join(timeout)
+            t.join(min(timeout, 2.0))
 
     def pause(self) -> None:
         """Stop taking work while still heartbeating — a wedged-but-alive
-        node (test/bench affordance: makes kill-mid-wave deterministic)."""
-        self._paused = True
+        node (test/bench affordance: makes kill-mid-wave deterministic).
+        Thread hosts only."""
+        if self._ctl is not None:
+            self._ctl.paused.set()
 
     def resume(self) -> None:
-        self._paused = False
+        if self._ctl is not None:
+            self._ctl.paused.clear()
+
+    def throttle(self, seconds_per_shard: float) -> None:
+        """Inject per-shard slowness (test/bench affordance: the measured
+        capacity re-weighting's deliberately slow node). Thread hosts."""
+        if self._ctl is None:
+            raise RuntimeError("throttle() is a thread-host affordance")
+        self._ctl.throttle_s = seconds_per_shard
 
     @property
     def alive(self) -> bool:
-        return not self._killed and not self._stopping
+        ok = not self._killed and not self._stopping
+        if self.host == "process":
+            ok = ok and self._proc.is_alive()
+        return ok
 
-    # -- work ---------------------------------------------------------------
+    # -- scheduler-side protocol pumps --------------------------------------
     def submit(self, fn: Callable, chunk: Any, n: int,
                inner_lanes: Optional[int] = None) -> ShardTask:
+        """Enqueue one shard. Returns immediately: the payload travels
+        through the async outbox (a STAGE frame ahead of a tiny SUBMIT
+        when staging overlap is on), so serialization and transfer happen
+        while earlier waves execute."""
         task = ShardTask(fn, chunk, n, inner_lanes)
-        self._q.put(task)
-        return task
-
-    def _hb_loop(self) -> None:
-        while not self._killed:
-            # a graceful leave keeps beating until the worker has DRAINED
-            # (unfinished_tasks covers the task the worker already popped:
-            # a long final shard must not expire the lease — deregister is
-            # never a failure)
-            if self._stopping and self._q.unfinished_tasks == 0:
-                return
-            self.registry.heartbeat(self.node_id)
-            time.sleep(self.heartbeat_s)
-
-    def _work_loop(self) -> None:
-        while not self._killed:
-            if self._paused:
-                time.sleep(self.heartbeat_s / 2)
-                continue
-            try:
-                task = self._q.get(timeout=self.heartbeat_s)
-            except queue.Empty:
-                if self._stopping:
-                    break
-                continue
-            try:
-                if task.cancelled or self._killed:
-                    continue
-                try:
-                    kw = _lane_kwargs(self.backend, task.n,
-                                      task.inner_lanes)
-                    out, rec = self.backend.dispatch(
-                        task.fn, task.chunk, task.n, **kw).result()
-                    if self._killed:    # died mid-compute: result is lost
-                        return
-                    rec.extra["node_id"] = self.node_id
-                    task.set_result(out, rec)
-                except BaseException as e:  # noqa: BLE001 — reported
-                    if self._killed:
-                        return
-                    task.set_error(e)
-            finally:
-                self._q.task_done()
-        if self._stopping and not self._killed:
-            self.registry.deregister(self.node_id)
-
-
-# ----------------------------------------------------------------------
-# Process-hosted nodes (real multiprocessing workers)
-# ----------------------------------------------------------------------
-
-def _process_worker_main(node_id: str, task_q, result_q, hb_q,
-                         heartbeat_s: float, backend_kind: str,
-                         cache_dir: str) -> None:
-    """Entry point of a node process: own JAX runtime, own compile cache.
-    Protocol: task_q items are (task_id, fn, chunk, n, inner_lanes) or
-    None (graceful stop); result_q items are (task_id, "ok", out, rec) or
-    (task_id, "err", repr)."""
-    stop = threading.Event()
-
-    def hb() -> None:
-        while not stop.is_set():
-            hb_q.put(node_id)
-            time.sleep(heartbeat_s)
-
-    # beat BEFORE the heavy imports: booting is not being dead (the parent
-    # additionally bridges the spawn bootstrap with a boot-grace beat)
-    threading.Thread(target=hb, daemon=True).start()
-    os.environ.setdefault("JAX_PLATFORMS", "cpu")
-    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
-    import jax  # noqa: F401  (fresh runtime in this process)
-
-    from repro.core.backend import make_backend
-    from repro.core.compile_cache import CompileCache
-
-    backend = make_backend(backend_kind,
-                           cache=CompileCache(cache_dir=cache_dir))
-    try:
-        while True:
-            item = task_q.get()
-            if item is None:
-                return
-            task_id, fn, chunk, n, inner_lanes = item
-            try:
-                kw = _lane_kwargs(backend, n, inner_lanes)
-                out, rec = backend.dispatch(fn, chunk, n, **kw).result()
-                rec.extra["node_id"] = node_id
-                out = jax.tree_util.tree_map(np.asarray, out)
-                result_q.put((task_id, "ok", out, rec))
-            except BaseException as e:  # noqa: BLE001
-                result_q.put((task_id, "err", repr(e)))
-    finally:
-        stop.set()
-
-
-class ProcessNodeAgent:
-    """A node hosted in its own Python process (``multiprocessing`` spawn):
-    a separate JAX runtime whose death is a real process death. Same
-    interface as ``NodeAgent``; shard functions must be picklable
-    (module-level), as anything crossing host boundaries must be."""
-
-    def __init__(self, node_id: str, registry: NodeRegistry,
-                 capacity: int = 1,
-                 backend_kind: str = "array",
-                 cache_dir: Optional[str] = None,
-                 heartbeat_s: float = 0.05,
-                 start: bool = True):
-        import multiprocessing as mp
-        ctx = mp.get_context("spawn")
-        self.node_id = node_id
-        self.registry = registry
-        self.capacity = capacity
-        self.heartbeat_s = heartbeat_s
-        self._task_q = ctx.Queue()
-        self._result_q = ctx.Queue()
-        self._hb_q = ctx.Queue()
-        self._pending: dict = {}
-        self._lock = threading.Lock()
-        self._killed = False
-        self._stopping = False
-        self._proc = ctx.Process(
-            target=_process_worker_main,
-            args=(node_id, self._task_q, self._result_q, self._hb_q,
-                  heartbeat_s, backend_kind,
-                  cache_dir or _node_cache_dir(node_id)),
-            daemon=True)
-        if start:
-            self.start()
-
-    def start(self) -> "ProcessNodeAgent":
-        self.registry.register(self.node_id, self.capacity)
-        self._proc.start()
-        for target in (self._pump_heartbeats, self._pump_results):
-            threading.Thread(target=target, daemon=True,
-                             name=f"node-{self.node_id}-{target.__name__}"
-                             ).start()
-        return self
-
-    def submit(self, fn: Callable, chunk: Any, n: int,
-               inner_lanes: Optional[int] = None) -> ShardTask:
-        task = ShardTask(fn, chunk, n, inner_lanes)
+        if self._ctl is not None:
+            # thread hosts share the ctl object with their worker: a
+            # scheduler-side cancel reaches the execution loop directly
+            task._on_cancel = self._ctl.cancelled.add
         with self._lock:
             self._pending[task.task_id] = task
-        import jax
-        chunk = jax.tree_util.tree_map(np.asarray, chunk)  # picklable
-        self._task_q.put((task.task_id, fn, chunk, n, inner_lanes))
+        if self._numpy_out:
+            import jax
+            chunk = jax.tree_util.tree_map(np.asarray, chunk)  # picklable
+        sub = {"task_id": task.task_id, "fn": fn, "n": n,
+               "inner_lanes": inner_lanes}
+        if self.overlap_staging:
+            self._outbox.put((STAGE, {"task_id": task.task_id,
+                                      "chunk": chunk}, task))
+            sub["staged"] = True
+        else:
+            sub["chunk"] = chunk
+        self._outbox.put((SUBMIT, sub, task))
         return task
 
-    def kill(self) -> None:
-        """Hard node death: SIGTERM the process; in-flight work is lost."""
-        self._killed = True
-        if self._proc.is_alive():
-            self._proc.terminate()
-
-    def stop(self, timeout: float = 10.0) -> None:
-        self._stopping = True
-        try:
-            self._task_q.put(None)
-            self._proc.join(timeout)
-        finally:
-            self.registry.deregister(self.node_id)
-
-    @property
-    def alive(self) -> bool:
-        return not self._killed and not self._stopping \
-            and self._proc.is_alive()
-
-    def _pump_heartbeats(self) -> None:
-        booted = False
-        while not self._killed:
-            # keep relaying beats through a graceful stop until the child
-            # has delivered every pending result (drain != death)
-            if self._stopping and not self._pending:
+    def _send_loop(self) -> None:
+        skipped: set = set()
+        while True:
+            item = self._outbox.get()
+            if item is None:
                 return
+            kind, payload, task = item
+            if self._killed:
+                continue
+            if task is not None:
+                # a poisoned pair (oversized/unpicklable STAGE -> task
+                # already errored) or a shard cancelled BEFORE its
+                # payload hit the wire is skipped whole; once the STAGE
+                # is out, its SUBMIT must follow so the node's stager
+                # entry is consumed (worker-side cancellation discards it)
+                if kind == STAGE and (task.ready or task.cancelled):
+                    skipped.add(task.task_id)
+                    continue
+                if kind == SUBMIT and (
+                        task.ready or task.task_id in skipped
+                        or (task.cancelled and not payload.get("staged"))):
+                    continue
             try:
-                node_id = self._hb_q.get(timeout=self.heartbeat_s)
-                booted = True
-            except queue.Empty:
+                self._ch.send(kind, payload)
+            except PayloadTooLarge as e:
+                # rejected before the wire: fail the shard loudly — the
+                # paired frame is skipped via task.ready above
+                if task is not None:
+                    task.set_error(e)
+            except TransportError:
+                return                # peer gone; the pump condemns it
+            except Exception as e:  # noqa: BLE001 — payload-specific
+                # e.g. an unpicklable shard fn over the socket wire:
+                # encode failed BEFORE any bytes hit the stream, so the
+                # channel is intact — fail just this shard, keep sending
+                if task is not None:
+                    task.set_error(e)
+
+    def _on_result(self, payload: dict) -> None:
+        with self._lock:
+            task = self._pending.pop(payload["task_id"], None)
+        if task is None or self._killed:
+            return
+        if payload.get("ok"):
+            task.set_result(payload["out"], payload["rec"])
+        else:
+            task.set_error(RuntimeError(
+                f"node {self.node_id} shard failed: {payload['err']}"))
+
+    def _pump(self) -> None:
+        """Scheduler-side frame router: heartbeats renew the lease,
+        results resolve futures, LEAVE deregisters, and EOF without a
+        LEAVE is condemned as node death (dead connection ≡ lease
+        expiry)."""
+        booted = self.host == "thread"
+        while not self._killed:
+            try:
+                frame = self._ch.recv(timeout=self.heartbeat_s)
+            except TransportError:
+                if not self._killed and not self._stopping:
+                    self.registry.expire(self.node_id)
+                return
+            if frame is None:
+                if self._stopping and not self._pending:
+                    return
                 # boot grace: the spawn bootstrap (python + jax import in
                 # the child) outlives short leases — the parent vouches
                 # for a LIVE process it can see until the child's own
                 # beats start flowing
-                if not booted and not self._killed and self._proc.is_alive():
+                if (not booted and not self._killed
+                        and self._proc is not None
+                        and self._proc.is_alive()):
                     self.registry.heartbeat(self.node_id)
                 continue
-            if not self._killed:
-                self.registry.heartbeat(node_id)
+            if frame.kind == HEARTBEAT:
+                booted = True
+                if not self._killed:
+                    self.registry.heartbeat(self.node_id)
+            elif frame.kind == RESULT:
+                self._on_result(frame.payload)
+            elif frame.kind == LEAVE:
+                self.registry.deregister(self.node_id)
+                return
 
-    def _pump_results(self) -> None:
-        while not self._killed:
-            try:
-                item = self._result_q.get(timeout=self.heartbeat_s)
-            except queue.Empty:
-                # on a graceful stop, keep draining while the child still
-                # owes results AND can still deliver them — returning on
-                # the first empty poll would drop an in-flight result and
-                # leave its shard waiting forever
-                if self._stopping and (not self._pending
-                                       or not self._proc.is_alive()):
-                    return
-                continue
-            task_id, status, *payload = item
-            with self._lock:
-                task = self._pending.pop(task_id, None)
-            if task is None or self._killed:
-                continue
-            if status == "ok":
-                task.set_result(payload[0], payload[1])
-            else:
-                task.set_error(RuntimeError(
-                    f"node {self.node_id} shard failed: {payload[0]}"))
+
+class ProcessNodeAgent(NodeAgent):
+    """A node hosted in its own Python process (``multiprocessing``
+    spawn): a separate JAX runtime whose death is a real process death.
+    Same interface as ``NodeAgent``; shard functions must be picklable
+    (module-level), as anything crossing host boundaries must be."""
+
+    def __init__(self, node_id: str, registry: NodeRegistry, **kwargs):
+        kwargs.setdefault("host", "process")
+        super().__init__(node_id, registry, **kwargs)
 
 
 def spawn_local_nodes(n_nodes: int, registry: NodeRegistry,
                       mode: str = "thread",
                       capacities: Optional[List[int]] = None,
                       name_prefix: str = "node",
+                      transport: Optional[Any] = None,
                       **agent_kwargs) -> List[Any]:
     """Spin up ``n_nodes`` local node agents (simulated multi-host).
     ``mode`` is "thread" (default; shared process, isolated state) or
-    "process" (real ``multiprocessing`` workers). With N fake XLA host
-    devices (``--xla_force_host_platform_device_count=N``), thread nodes
+    "process" (real ``multiprocessing`` workers); ``transport`` is shared
+    by the fleet (one ``SocketTransport`` listener serves every node).
+    With N fake XLA host devices
+    (``--xla_force_host_platform_device_count=N``), thread nodes
     partition ``jax.devices()`` round-robin so each node owns a distinct
     device subset."""
     caps = capacities or [1] * n_nodes
     if len(caps) != n_nodes:
         raise ValueError(f"capacities has {len(caps)} entries "
                          f"for {n_nodes} nodes")
+    transport = transport if transport is not None else InprocTransport()
     if mode == "process":
-        return [ProcessNodeAgent(f"{name_prefix}{i}", registry,
-                                 capacity=caps[i], **agent_kwargs)
+        return [NodeAgent(f"{name_prefix}{i}", registry, capacity=caps[i],
+                          host="process", transport=transport,
+                          **agent_kwargs)
                 for i in range(n_nodes)]
     if mode != "thread":
         raise ValueError(f"unknown node mode {mode!r}; "
@@ -417,5 +665,5 @@ def spawn_local_nodes(n_nodes: int, registry: NodeRegistry,
         subset = devs[i::n_nodes] if len(devs) >= n_nodes else None
         agents.append(NodeAgent(f"{name_prefix}{i}", registry,
                                 capacity=caps[i], devices=subset,
-                                **agent_kwargs))
+                                transport=transport, **agent_kwargs))
     return agents

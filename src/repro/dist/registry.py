@@ -10,7 +10,16 @@ is that knowledge for the distributed backend:
     register-at-any-time, and the very next wave includes the newcomer;
   * ``heartbeat`` renews the node's lease. Staleness is computed by the
     SAME ``HeartbeatDetector`` that drives ``resilient_train`` restarts
-    (``repro.runtime.fault``) — one liveness clock for the whole repo;
+    (``repro.runtime.fault``) — one liveness clock for the whole repo.
+    Heartbeats ARRIVE AS FRAMES now (``repro.dist.transport``): the
+    agent's scheduler-side pump routes HEARTBEAT frames here, and a
+    dropped connection is condemned immediately via ``expire`` — lease
+    expiry and a dead connection are one signal;
+  * ``observe_shard`` feeds each completed shard's measured wall clock
+    into a per-node cost-per-instance EWMA (``repro.core.autoscale.Ewma``
+    — the same smoothing the wave controller runs). The backend turns it
+    into capacity re-weighting: a measured-slow node receives smaller
+    shards on the very next wave;
   * health is three-state: ``alive`` -> ``suspect`` (no beat for
     ``suspect_frac * heartbeat_timeout_s``; excluded from NEW waves but
     not yet condemned) -> ``dead`` (lease expired; in-flight waves on it
@@ -31,6 +40,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.core.autoscale import Ewma
 from repro.runtime.fault import HeartbeatDetector
 
 ALIVE = "alive"
@@ -49,6 +59,7 @@ class NodeInfo:
     waves: int = 0                    # shards dispatched to this node
     instances: int = 0                # tasks dispatched to this node
     failures: int = 0                 # times this id's lease expired
+    cost: Optional[Ewma] = None       # measured seconds/instance EWMA
     extra: dict = field(default_factory=dict)
 
 
@@ -113,6 +124,19 @@ class NodeRegistry:
             if info.state == SUSPECT:
                 info.state = ALIVE
             return True
+
+    def expire(self, node_id: str) -> None:
+        """Condemn a node NOW: its transport connection dropped, which is
+        the same fact a lease expiry asserts (nobody will deliver its
+        results) learned faster. A LEFT node stays left — a graceful
+        leave's connection close is not a failure."""
+        with self._lock:
+            info = self.nodes.get(node_id)
+            if info is None or info.state in (DEAD, LEFT):
+                return
+            info.state = DEAD
+            info.failures += 1
+            self.detector.forget(node_id)
 
     # -- health ------------------------------------------------------------
     def sweep(self, now: Optional[float] = None) -> Dict[str, str]:
@@ -187,11 +211,33 @@ class NodeRegistry:
                 info.waves += 1
                 info.instances += n_instances
 
+    def observe_shard(self, node_id: str, n: int, wall_s: float) -> None:
+        """Feed one completed shard's measured wall into the node's
+        cost-per-instance EWMA — the capacity re-weighting signal."""
+        if n <= 0 or wall_s <= 0:
+            return
+        with self._lock:
+            info = self.nodes.get(node_id)
+            if info is None:
+                return
+            if info.cost is None:
+                info.cost = Ewma(alpha=0.5)
+            info.cost.update(wall_s / n)
+
+    def cost_per_instance(self, node_id: str) -> Optional[float]:
+        with self._lock:
+            info = self.nodes.get(node_id)
+            return (info.cost.value
+                    if info is not None and info.cost is not None else None)
+
     def rollup(self) -> Dict[str, dict]:
-        """Per-node summary (state, capacity, dispatched work, failures)."""
+        """Per-node summary (state, capacity, dispatched work, failures,
+        measured cost)."""
         self.sweep()
         with self._lock:
             return {i.node_id: {"state": i.state, "capacity": i.capacity,
                                 "waves": i.waves, "instances": i.instances,
-                                "failures": i.failures}
+                                "failures": i.failures,
+                                "cost_per_instance":
+                                    i.cost.value if i.cost else None}
                     for i in self.nodes.values()}

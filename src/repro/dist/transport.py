@@ -1,0 +1,459 @@
+"""Transport: the launch fabric's wire protocol, pluggable per fabric.
+
+The paper's scheduler talks to its nodes over a real interconnect; what
+makes LLMapReduce-style launch portable is that the SCHEDULER POLICY
+never sees the interconnect — only a small message protocol. This module
+is that separation for ``repro.dist``: five frame kinds
+
+  ``SUBMIT``     scheduler -> node: run one wave shard (tiny — when
+                 staging overlap is on, the payload travelled ahead in a
+                 STAGE frame and SUBMIT only references it)
+  ``RESULT``     node -> scheduler: one shard's output + LaunchRecord
+                 (or its error), matched to the SUBMIT by ``task_id``
+  ``HEARTBEAT``  node -> scheduler: lease renewal; ALSO the connection
+                 handshake — the first thing a node says on a fresh
+                 socket is "I'm alive" with its node id
+  ``STAGE``      scheduler -> node: a shard's input payload, streamed
+                 ahead of its SUBMIT so node-side staging overlaps with
+                 the previous wave's execution (Fig 5's copy time hidden
+                 under compute)
+  ``LEAVE``      either direction: graceful-leave request (scheduler ->
+                 node: please drain) or announcement (node -> scheduler:
+                 drained, deregister me — never a failure)
+
+over two interchangeable carriers:
+
+  ``InprocTransport``  queue pairs (``queue.Queue`` in one process,
+                       ``multiprocessing`` queues across processes) —
+                       the CI default, today's queues refactored behind
+                       the interface; payloads pass by reference.
+  ``SocketTransport``  length-prefixed frames over localhost TCP, one
+                       connection per node — agents are genuinely
+                       host-spanning-shaped: everything crossing the
+                       channel is serialized, a dead peer is a dropped
+                       connection, and the scheduler reads EOF as lease
+                       expiry (``NodeRegistry.expire``).
+
+Payload codec: msgpack when available and the payload is plain data
+(control frames), pickle otherwise (shard functions, numpy trees) — the
+codec byte travels in the frame so either end can be msgpack-less.
+Frames carry an explicit size cap (``max_frame_bytes``): oversized sends
+raise ``PayloadTooLarge`` before touching the wire, and a received
+length prefix past the cap poisons the connection (``ProtocolError``)
+instead of allocating unbounded memory.
+"""
+from __future__ import annotations
+
+import pickle
+import queue
+import select
+import socket
+import struct
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+try:  # optional wire codec for control frames; pickle is the fallback
+    import msgpack as _msgpack
+except ImportError:  # pragma: no cover - container-dependent
+    _msgpack = None
+
+SUBMIT = "SUBMIT"
+RESULT = "RESULT"
+HEARTBEAT = "HEARTBEAT"
+STAGE = "STAGE"
+LEAVE = "LEAVE"
+_CLOSE = "_CLOSE"                     # inproc-internal EOF sentinel
+
+_KIND_CODE = {SUBMIT: b"S", RESULT: b"R", HEARTBEAT: b"H",
+              STAGE: b"G", LEAVE: b"L"}
+_CODE_KIND = {v: k for k, v in _KIND_CODE.items()}
+
+#: default frame cap — far above any sane wave shard, far below "the
+#: driver pickled the whole input set into one frame by accident"
+DEFAULT_MAX_FRAME_BYTES = 256 << 20
+
+
+class TransportError(RuntimeError):
+    """Base class for every fault the transport layer can raise."""
+
+
+class ChannelClosed(TransportError):
+    """The peer is gone (EOF / closed channel): nothing more will arrive
+    and nothing more can be sent. The scheduler side reads this as node
+    death (lease expiry ≡ dead connection)."""
+
+
+class PayloadTooLarge(TransportError):
+    """A frame exceeded ``max_frame_bytes``; rejected before the wire."""
+
+
+class ProtocolError(TransportError):
+    """The byte stream violated the framing (oversized length prefix,
+    unknown frame kind) — the connection is poisoned and closed."""
+
+
+@dataclass
+class Frame:
+    """One decoded protocol message."""
+    kind: str
+    payload: Any = None
+
+
+# ----------------------------------------------------------------------
+# codec
+# ----------------------------------------------------------------------
+
+def _encode(payload: Any) -> Tuple[bytes, bytes]:
+    """-> (codec_byte, body). Control payloads ride msgpack when it is
+    importable; anything msgpack cannot express (functions, arrays,
+    records) falls back to pickle — the codec byte tells the peer."""
+    if payload is None:
+        return b"0", b""
+    if _msgpack is not None:
+        try:
+            return b"M", _msgpack.packb(payload, use_bin_type=True)
+        except (TypeError, ValueError, OverflowError):
+            pass
+    return b"P", pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def _decode(codec: bytes, body: bytes) -> Any:
+    if codec == b"0":
+        return None
+    if codec == b"M":
+        if _msgpack is None:
+            raise ProtocolError("peer sent a msgpack frame but msgpack "
+                                "is not importable here")
+        return _msgpack.unpackb(body, raw=False)
+    if codec == b"P":
+        return pickle.loads(body)
+    raise ProtocolError(f"unknown payload codec {codec!r}")
+
+
+def _approx_payload_bytes(payload: Any) -> int:
+    """Cheap size estimate for by-reference (inproc) sends: array leaves
+    dominate any realistic oversize, so count their buffers plus a small
+    per-object constant — no serialization pass just to enforce a cap."""
+    seen = 0
+    stack = [payload]
+    while stack:
+        x = stack.pop()
+        nbytes = getattr(x, "nbytes", None)
+        if nbytes is not None:
+            seen += int(nbytes)
+        elif isinstance(x, (bytes, bytearray, str)):
+            seen += len(x)
+        elif isinstance(x, dict):
+            stack.extend(x.values())
+            seen += 64
+        elif isinstance(x, (list, tuple)):
+            stack.extend(x)
+            seen += 64
+        else:
+            seen += 64
+    return seen
+
+
+# ----------------------------------------------------------------------
+# channels
+# ----------------------------------------------------------------------
+
+class InprocChannel:
+    """One endpoint of a queue-pair channel. Queue objects come from
+    ``queue`` (thread nodes) or a ``multiprocessing`` context (process
+    nodes) — the protocol on top is identical. Deliberately lock-free
+    and picklable (a process node's endpoint crosses the spawn boundary
+    inside the ``Process`` args)."""
+
+    def __init__(self, send_q, recv_q,
+                 max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES):
+        self._send_q = send_q
+        self._recv_q = recv_q
+        self.max_frame_bytes = max_frame_bytes
+        self.closed = False
+
+    def send(self, kind: str, payload: Any = None) -> None:
+        if self.closed:
+            raise ChannelClosed("send on a closed channel")
+        size = _approx_payload_bytes(payload)
+        if size > self.max_frame_bytes:
+            raise PayloadTooLarge(
+                f"{kind} payload ~{size} bytes exceeds the frame cap "
+                f"{self.max_frame_bytes}")
+        self._send_q.put(Frame(kind, payload))
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[Frame]:
+        if self.closed:
+            raise ChannelClosed("recv on a closed channel")
+        try:
+            frame = self._recv_q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        if frame.kind == _CLOSE:
+            self.closed = True
+            raise ChannelClosed("peer closed the channel")
+        return frame
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        try:
+            self._send_q.put(Frame(_CLOSE))
+        except Exception:  # noqa: BLE001 — peer queue may already be gone
+            pass
+
+
+class SocketChannel:
+    """Length-prefixed frames over one TCP connection: ``!I`` body length,
+    then 1 kind byte + 1 codec byte + payload. Sends are serialized under
+    a lock (the agent's outbox and heartbeat threads share the socket);
+    recv is single-reader with an incremental reassembly buffer, so a
+    timeout mid-frame loses nothing."""
+
+    def __init__(self, sock: socket.socket,
+                 max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES):
+        try:
+            # tiny frames (heartbeats, submits) must not sit in Nagle's
+            # buffer; best-effort — unix socketpairs have no Nagle at all
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+        self._sock = sock
+        self.max_frame_bytes = max_frame_bytes
+        self._slock = threading.Lock()
+        self._buf = bytearray()
+        self.closed = False
+
+    def send(self, kind: str, payload: Any = None) -> None:
+        codec, body = _encode(payload)
+        if len(body) > self.max_frame_bytes:
+            raise PayloadTooLarge(
+                f"{kind} payload {len(body)} bytes exceeds the frame cap "
+                f"{self.max_frame_bytes}")
+        frame = (struct.pack("!I", len(body) + 2) + _KIND_CODE[kind]
+                 + codec + body)
+        with self._slock:
+            if self.closed:
+                raise ChannelClosed("send on a closed channel")
+            try:
+                self._sock.sendall(frame)
+            except OSError as e:
+                self.closed = True
+                raise ChannelClosed(f"peer gone mid-send: {e}") from e
+
+    def _parse_one(self) -> Optional[Frame]:
+        if len(self._buf) < 4:
+            return None
+        (length,) = struct.unpack("!I", self._buf[:4])
+        if length > self.max_frame_bytes + 64:
+            self.close()
+            raise ProtocolError(
+                f"length prefix {length} past the frame cap "
+                f"{self.max_frame_bytes}: connection poisoned")
+        if len(self._buf) < 4 + length:
+            return None
+        body = bytes(self._buf[4:4 + length])
+        del self._buf[:4 + length]
+        kind = _CODE_KIND.get(body[0:1])
+        if kind is None:
+            self.close()
+            raise ProtocolError(f"unknown frame kind byte {body[0:1]!r}")
+        return Frame(kind, _decode(body[1:2], body[2:]))
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[Frame]:
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            frame = self._parse_one()
+            if frame is not None:
+                return frame
+            if self.closed:
+                raise ChannelClosed("recv on a closed channel")
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    return None
+            # wait via select, NOT settimeout: the socket timeout is
+            # socket-wide, so a recv-side timeout would also abort a
+            # concurrent blocking sendall mid-frame in another thread
+            # (poisoning the channel and falsely condemning a healthy
+            # node); select leaves the socket blocking for writers
+            try:
+                readable, _, _ = select.select([self._sock], [], [],
+                                               remaining)
+            except (OSError, ValueError) as e:   # fd closed under us
+                self.closed = True
+                raise ChannelClosed(f"connection dropped: {e}") from e
+            if not readable:
+                return None
+            try:
+                data = self._sock.recv(1 << 16)
+            except OSError as e:
+                self.closed = True
+                raise ChannelClosed(f"connection dropped: {e}") from e
+            if not data:
+                self.closed = True
+                raise ChannelClosed("peer closed the connection")
+            self._buf += data
+
+    def close(self) -> None:
+        self.closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# ----------------------------------------------------------------------
+# transports
+# ----------------------------------------------------------------------
+
+@dataclass
+class NodePort:
+    """What ``Transport.create(node_id)`` hands the agent: a picklable
+    ``endpoint`` spec the worker turns into its channel (via
+    ``open_worker_channel``, possibly in another process), and a
+    ``driver_channel()`` call that yields the scheduler-side endpoint —
+    blocking, for sockets, until the worker has dialled in."""
+    endpoint: tuple
+    driver_channel: Callable[..., Any]
+
+
+class InprocTransport:
+    """Today's queues, behind the interface: a fresh queue pair per node.
+    Pass a ``multiprocessing`` context as ``ctx`` to get queues that
+    cross a spawn boundary (process-hosted nodes)."""
+
+    name = "inproc"
+
+    def __init__(self, max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES):
+        self.max_frame_bytes = max_frame_bytes
+
+    def create(self, node_id: str, ctx=None) -> NodePort:
+        qf = ctx.Queue if ctx is not None else queue.Queue
+        to_node, to_driver = qf(), qf()
+        driver = InprocChannel(to_node, to_driver, self.max_frame_bytes)
+        worker = InprocChannel(to_driver, to_node, self.max_frame_bytes)
+        return NodePort(("inproc", worker),
+                        lambda timeout=None: driver)
+
+    def close(self) -> None:
+        pass
+
+
+class SocketTransport:
+    """Localhost TCP, one connection per node. The scheduler side listens;
+    a connecting worker's first frame is a ``HEARTBEAT`` carrying its
+    node id — the handshake IS a lease renewal. ``create(node_id)`` may
+    be called before or after the worker dials in; ``driver_channel()``
+    blocks until the matching connection lands (or times out)."""
+
+    name = "socket"
+
+    def __init__(self, max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES,
+                 accept_timeout_s: float = 30.0):
+        self.max_frame_bytes = max_frame_bytes
+        self.accept_timeout_s = accept_timeout_s
+        self._srv = socket.create_server(("127.0.0.1", 0))
+        self._srv.settimeout(0.2)
+        self.address = self._srv.getsockname()
+        self._waiting: dict = {}
+        self._wlock = threading.Lock()
+        self._closing = False
+        threading.Thread(target=self._accept_loop, daemon=True,
+                         name="transport-accept").start()
+
+    def _waiter(self, node_id: str) -> "queue.Queue":
+        with self._wlock:
+            return self._waiting.setdefault(node_id, queue.Queue())
+
+    def _accept_loop(self) -> None:
+        while not self._closing:
+            try:
+                conn, _ = self._srv.accept()
+            except TimeoutError:
+                continue
+            except OSError:
+                return
+            # handshake off-thread: one slow dialler must not block the
+            # accept loop (every node connects through it)
+            threading.Thread(target=self._handshake, args=(conn,),
+                             daemon=True).start()
+
+    def _handshake(self, conn: socket.socket) -> None:
+        ch = SocketChannel(conn, self.max_frame_bytes)
+        try:
+            frame = ch.recv(timeout=10.0)
+        except TransportError:
+            ch.close()
+            return
+        if frame is None or frame.kind != HEARTBEAT:
+            ch.close()
+            return
+        self._waiter(str(frame.payload)).put(ch)
+
+    def create(self, node_id: str, ctx=None) -> NodePort:
+        waiter = self._waiter(node_id)
+        endpoint = ("socket", (tuple(self.address), node_id,
+                               self.max_frame_bytes))
+
+        def driver_channel(timeout: Optional[float] = None):
+            try:
+                return waiter.get(timeout=timeout or self.accept_timeout_s)
+            except queue.Empty:
+                raise TransportError(
+                    f"node {node_id!r} never connected to "
+                    f"{self.address}") from None
+        return NodePort(endpoint, driver_channel)
+
+    @staticmethod
+    def connect(address, node_id: str,
+                max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES
+                ) -> SocketChannel:
+        """Worker-side dial-in (runs on the node, possibly in another
+        process): open the connection and announce liveness."""
+        sock = socket.create_connection(tuple(address), timeout=10.0)
+        sock.settimeout(None)
+        ch = SocketChannel(sock, max_frame_bytes)
+        ch.send(HEARTBEAT, node_id)
+        return ch
+
+    def close(self) -> None:
+        self._closing = True
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+
+
+def open_worker_channel(endpoint: tuple):
+    """Turn a ``NodePort.endpoint`` into the worker-side channel. The
+    spec is picklable, so this works after a ``multiprocessing`` spawn as
+    well as in a worker thread."""
+    kind, spec = endpoint
+    if kind == "inproc":
+        return spec
+    if kind == "socket":
+        address, node_id, cap = spec
+        return SocketTransport.connect(address, node_id, cap)
+    raise ValueError(f"unknown worker endpoint kind {kind!r}")
+
+
+def make_transport(transport, **kwargs):
+    """'inproc' | 'socket' | a ready transport instance -> (transport,
+    owned): ``owned`` tells the caller whether closing it is its job."""
+    if isinstance(transport, str):
+        if transport == "inproc":
+            return InprocTransport(**kwargs), True
+        if transport == "socket":
+            return SocketTransport(**kwargs), True
+        raise ValueError(f"unknown transport {transport!r}; "
+                         f"choose 'inproc' or 'socket'")
+    return transport, False

@@ -29,8 +29,11 @@ def _backends(cache):
             ArrayBackend(cache=cache, inner_lanes=4),
             PipelinedBackend(cache=cache, inner_lanes=4, depth=3),
             # the multi-host fabric speaks the same protocol end-to-end
+            # over BOTH wires — queue pairs and per-node TCP connections
             # (generous lease: a busy CI box must not false-kill nodes)
             DistributedBackend(n_nodes=2, cache=cache,
+                               heartbeat_timeout_s=30.0),
+            DistributedBackend(n_nodes=2, cache=cache, transport="socket",
                                heartbeat_timeout_s=30.0)]
 
 
