@@ -44,7 +44,8 @@ def make_launch_backend(kind, cache, args):
         node_kind = "array" if kind == "serial" else kind
         return make_backend("dist", cache=cache, n_nodes=args.nodes,
                             node_backend=node_kind,
-                            transport=args.transport)
+                            transport=args.transport,
+                            stage_dedup=not args.no_stage_dedup)
     return make_backend(kind, cache=cache)
 
 
@@ -84,6 +85,11 @@ def main():
                     help="the fabric's wire (with --nodes > 1): in-process "
                          "queues, or length-prefixed frames over localhost "
                          "TCP — one connection per node")
+    ap.add_argument("--no-stage-dedup", action="store_true",
+                    help="disable content-addressed chunk staging in the "
+                         "fabric (with --nodes > 1): every shard payload "
+                         "travels whole, the A/B baseline for the "
+                         "bytes-on-wire split printed after the launch")
     ap.add_argument("--compare", action="store_true",
                     help="also time the array backend for contrast")
     ap.add_argument("--cache-dir", default=None,
@@ -134,6 +140,16 @@ def main():
               f"stage wall, {st['hidden_frac']:.0%} hidden under "
               f"execution (visible: "
               f"{(st['wall_s'] - st['hidden_s']) * 1e3:.1f} ms)")
+        if st["bytes_delivered"]:
+            dedup_note = (
+                f", chunk-cache hit rate {st['cache_hit_rate']:.0%}"
+                if "cache_hit_rate" in st else
+                " (stage dedup off: every byte travels)")
+            print(f"staging bytes: {st['bytes_on_wire'] / 1e6:.2f} MB on "
+                  f"the wire for {st['bytes_delivered'] / 1e6:.2f} MB "
+                  f"delivered "
+                  f"({st['bytes_on_wire'] / st['bytes_delivered']:.2f}x)"
+                  f"{dedup_note}")
     print("\nper-wave launch records (per-level: sched -> node -> core):")
     print(table(report.records[:4], title=f"first waves of {args.n}"))
     if args.compare:

@@ -78,16 +78,18 @@ class Stager:
     def __init__(self, busy_clock: Optional[Callable[[], float]] = None):
         self._busy_clock = busy_clock
         self._staged: Dict[Any, tuple] = {}
+        self._pending: Dict[Any, threading.Event] = {}
+        self._errors: Dict[Any, BaseException] = {}
         self._lock = threading.Lock()
         self.stats = {"shards": 0, "bytes": 0,
                       "t_stage": 0.0, "t_hidden": 0.0}
 
-    def _materialize(self, chunk: Any, overlapped: bool) -> tuple:
+    def _materialize(self, produce: Callable[[], Any],
+                     overlapped: bool) -> tuple:
         t0 = time.perf_counter()
         b0 = (self._busy_clock() if overlapped and self._busy_clock
               else None)
-        staged = jax.tree_util.tree_map(
-            lambda x: np.array(x, copy=True), chunk)
+        staged = produce()
         dt = time.perf_counter() - t0
         hidden = 0.0
         if b0 is not None:
@@ -102,24 +104,102 @@ class Stager:
         self.stats["t_hidden"] += hidden
         return staged, info
 
+    @staticmethod
+    def _copy_tree(chunk: Any) -> Callable[[], Any]:
+        return lambda: jax.tree_util.tree_map(
+            lambda x: np.array(x, copy=True), chunk)
+
+    def _park(self, task_id: Any, staged: Any, info: dict) -> None:
+        with self._lock:
+            self._staged[task_id] = (staged, info)
+            ev = self._pending.get(task_id)
+            if ev is not None:
+                ev.set()
+
     def stage(self, task_id: Any, chunk: Any) -> dict:
         """Stage a shard ahead of its SUBMIT (the overlapped path — the
         caller is the node's receiver thread, not its worker)."""
-        staged, info = self._materialize(chunk, overlapped=True)
-        with self._lock:
-            self._staged[task_id] = (staged, info)
+        staged, info = self._materialize(self._copy_tree(chunk),
+                                         overlapped=True)
+        self._park(task_id, staged, info)
         return info
 
-    def take(self, task_id: Any) -> tuple:
+    def promise(self, task_id: Any) -> None:
+        """Declare a shard whose payload is still assembling (its STAGE
+        frame was a chunk manifest): ``take`` for it blocks until
+        ``stage_assembled`` or ``fail`` resolves it, instead of reading
+        the absence as a protocol bug."""
+        with self._lock:
+            self._pending.setdefault(task_id, threading.Event())
+
+    def stage_assembled(self, task_id: Any, produce: Callable[[], Any],
+                        extra: Optional[dict] = None) -> dict:
+        """Resolve a promised shard: ``produce`` builds the staged tree
+        (for content-addressed staging, deserializing the reassembled
+        chunks IS the node-local copy — no second pass). ``extra`` keys
+        (dedup counters) are folded into the stage info."""
+        staged, info = self._materialize(produce, overlapped=True)
+        if extra:
+            info.update(extra)
+        self._park(task_id, staged, info)
+        return info
+
+    def fail(self, task_id: Any, err: BaseException) -> None:
+        """Resolve a promised shard with an error (digest mismatch, chunk
+        lost): its ``take`` raises ``err`` loudly — only that shard dies,
+        never a silent corrupt stage."""
+        with self._lock:
+            self._errors[task_id] = err
+            ev = self._pending.get(task_id)
+            if ev is not None:
+                ev.set()
+
+    def take(self, task_id: Any, timeout: Optional[float] = None) -> tuple:
         """-> (chunk, stage_info). The per-channel FIFO guarantees the
         STAGE frame was processed before its SUBMIT was enqueued, so a
-        missing id is a protocol bug, not a race — raise loudly."""
+        missing, unpromised id is a protocol bug, not a race — raise
+        loudly (KeyError). A promised id blocks until assembly resolves;
+        the wait is charged to the shard's visible stage wall."""
         with self._lock:
-            return self._staged.pop(task_id)
+            if task_id in self._errors:
+                self._pending.pop(task_id, None)
+                raise self._errors.pop(task_id)
+            if task_id in self._staged:
+                self._pending.pop(task_id, None)
+                return self._staged.pop(task_id)
+            ev = self._pending.get(task_id)
+        if ev is None:
+            raise KeyError(task_id)
+        t0 = time.perf_counter()
+        resolved = ev.wait(timeout)
+        waited = time.perf_counter() - t0
+        with self._lock:
+            self._pending.pop(task_id, None)
+            if task_id in self._errors:
+                raise self._errors.pop(task_id)
+            if not resolved or task_id not in self._staged:
+                raise TimeoutError(
+                    f"shard {task_id!r}: chunk assembly never completed "
+                    f"({waited:.1f}s)")
+            staged, info = self._staged.pop(task_id)
+        # the worker stood idle for this long: visible stage wall
+        info["t_wait_s"] = waited
+        info["t_stage"] += waited
+        self.stats["t_stage"] += waited
+        return staged, info
+
+    def discard(self, task_id: Any) -> None:
+        """Forget a shard quietly (its SUBMIT was cancelled)."""
+        with self._lock:
+            self._staged.pop(task_id, None)
+            self._errors.pop(task_id, None)
+            ev = self._pending.pop(task_id, None)
+            if ev is not None:
+                ev.set()
 
     def stage_inline(self, chunk: Any) -> tuple:
         """Unoverlapped staging on the worker's critical path."""
-        return self._materialize(chunk, overlapped=False)
+        return self._materialize(self._copy_tree(chunk), overlapped=False)
 
 
 def stage_point_to_point(host_tree: Any, devices: list) -> tuple:

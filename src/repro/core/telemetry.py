@@ -30,7 +30,7 @@ from __future__ import annotations
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 
 @dataclass
@@ -130,18 +130,40 @@ def nodes_rollup(records: List[LaunchRecord]) -> Dict[str, dict]:
     return out
 
 
-def stage_rollup(records: List[LaunchRecord]) -> Dict[str, float]:
+def stage_rollup(records: List[LaunchRecord]) -> Dict[str, Any]:
     """Whole-report staging overlap: total node-side stage wall, the
     part hidden under execution, and the hidden fraction (the measured
-    form of the paper's 'copy time overlapped with launch')."""
+    form of the paper's 'copy time overlapped with launch'). When the
+    fabric staged content-addressed, the rollup also carries the byte
+    split — ``bytes_on_wire`` (scheduler->node frames actually sent) vs
+    ``bytes_delivered`` (staged onto every node) — and an aggregate
+    chunk-cache hit rate."""
     wall = hidden = 0.0
+    wire = delivered = 0
+    hits = misses = 0
+    saw_dedup = False
     for r in records:
         st = r.extra.get("stage")
         if st:
             wall += st.get("wall_s", 0.0)
             hidden += st.get("hidden_s", 0.0)
-    return {"wall_s": wall, "hidden_s": hidden,
-            "hidden_frac": hidden / wall if wall > 0 else 0.0}
+            wire += st.get("bytes_on_wire", 0)
+            delivered += st.get("bytes_delivered", 0)
+            dd = st.get("dedup")
+            if dd:
+                saw_dedup = True
+                hits = max(hits, dd.get("cache_hits", 0))
+                misses = max(misses, dd.get("cache_misses", 0))
+    out: Dict[str, Any] = {
+        "wall_s": wall, "hidden_s": hidden,
+        "hidden_frac": hidden / wall if wall > 0 else 0.0,
+        "bytes_on_wire": wire, "bytes_delivered": delivered}
+    if saw_dedup:
+        # per-wave dedup rollups carry CUMULATIVE node cache counters;
+        # the latest (largest) snapshot is the whole-report truth
+        out["cache_hit_rate"] = (hits / (hits + misses)
+                                 if hits + misses else 0.0)
+    return out
 
 
 class Timer:

@@ -7,11 +7,16 @@ backend, and compile cache), nodes report liveness to a registry, and a
 node lost mid-wave feeds its work back through the policy layer's
 barrier-free speculative re-dispatch.
 
-  ``transport``  the wire protocol (SUBMIT/RESULT/HEARTBEAT/STAGE/LEAVE
-                 frames, msgpack-or-pickle payloads, explicit size caps)
-                 over two carriers: ``InprocTransport`` (queue pairs)
-                 and ``SocketTransport`` (length-prefixed frames over
+  ``transport``  the wire protocol (SUBMIT/RESULT/HEARTBEAT/STAGE/
+                 CHUNK/CHUNK_REQ/PEER/LEAVE frames, msgpack-or-pickle
+                 payloads, explicit size caps) over two carriers:
+                 ``InprocTransport`` (queue pairs) and
+                 ``SocketTransport`` (length-prefixed frames over
                  localhost TCP, one connection per node).
+  ``chunks``     content-addressed staging: digest-keyed chunking, the
+                 node-side LRU ``ChunkCache``, the scheduler-side
+                 ``ChunkDirectory`` (dedup planning + peer hints), and
+                 the node-to-node peer chunk fan-out.
   ``registry``   NodeRegistry: membership, heartbeat leases,
                  alive/suspect/dead health, elastic join/leave, and the
                  per-node measured-cost EWMA behind capacity
@@ -28,6 +33,9 @@ barrier-free speculative re-dispatch.
                  wave handles with partial-wave harvest, failover.
 """
 from repro.dist.backend import DistributedBackend, NoAliveNodesError
+from repro.dist.chunks import (DEFAULT_CHUNK_BYTES,
+                               DEFAULT_CHUNK_CACHE_BYTES, ChunkCache,
+                               ChunkDirectory, chunk_digest, chunk_split)
 from repro.dist.node import NodeAgent, ProcessNodeAgent, spawn_local_nodes
 from repro.dist.registry import (ALIVE, DEAD, LEFT, SUSPECT, NodeInfo,
                                  NodeRegistry)
@@ -38,6 +46,8 @@ from repro.dist.transport import (ChannelClosed, Frame, InprocTransport,
 
 __all__ = [
     "DistributedBackend", "NoAliveNodesError",
+    "ChunkCache", "ChunkDirectory", "chunk_digest", "chunk_split",
+    "DEFAULT_CHUNK_BYTES", "DEFAULT_CHUNK_CACHE_BYTES",
     "NodeAgent", "ProcessNodeAgent", "spawn_local_nodes",
     "NodeRegistry", "NodeInfo", "ALIVE", "SUSPECT", "DEAD", "LEFT",
     "Frame", "InprocTransport", "SocketTransport", "make_transport",

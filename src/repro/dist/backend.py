@@ -33,6 +33,14 @@ Under the LaunchBackend protocol sit two more measured mechanisms:
     RESULT record, aggregate into the wave's ``t_stage`` (visible stage
     only — the hidden part is, by definition, not on the critical path)
     and ``extra["stage"]``;
+  * **content-addressed dedup staging** (``stage_dedup=True``, the
+    default) — stage payloads are chunked and keyed by content digest in
+    a scheduler-side ``ChunkDirectory``; each node keeps an LRU chunk
+    cache, the scheduler sends only chunks a node does not already hold,
+    and hot chunks fan out node-to-node through scheduler-coordinated
+    peer hints, making bytes-on-wire sub-linear in fleet size for
+    replicated payloads. The wave's ``extra["stage"]`` grows
+    ``bytes_on_wire`` vs ``bytes_delivered`` plus a dedup rollup;
   * **measured capacity re-weighting** — each completed shard's wall
     feeds ``NodeRegistry.observe_shard`` (a per-node cost-per-instance
     EWMA, the same smoothing shape the wave controller runs), and
@@ -51,6 +59,8 @@ import jax
 
 from repro.core.telemetry import LaunchRecord, Timer
 from repro.core.backend import WaveHandle, concat_outputs
+from repro.dist.chunks import (DEFAULT_CHUNK_BYTES,
+                               DEFAULT_CHUNK_CACHE_BYTES, ChunkDirectory)
 from repro.dist.node import ShardTask, spawn_local_nodes
 from repro.dist.registry import DEAD, LEFT, NodeInfo, NodeRegistry
 from repro.dist.transport import make_transport
@@ -83,6 +93,35 @@ def split_by_capacity(n: int, capacities: List[float]) -> List[int]:
     for i in order[:n - sum(sizes)]:
         sizes[i] += 1
     return sizes
+
+
+def _dedup_rollup(node_records: List[dict]) -> Optional[dict]:
+    """Aggregate per-shard chunk-dedup detail into the wave's view:
+    additive chunk counters across shards, plus each node's LATEST
+    cumulative cache snapshot (the snapshots are not additive). Returns
+    None when no shard staged content-addressed."""
+    dedups = [nr for nr in node_records if nr.get("stage_dedup")]
+    if not dedups:
+        return None
+    agg = {"chunks": 0, "from_cache": 0, "from_wire": 0,
+           "from_peer": 0, "requested": 0}
+    latest: Dict[str, dict] = {}
+    peer_bytes: Dict[str, int] = {}
+    for nr in dedups:                    # node_records are shard-ordered;
+        d = nr["stage_dedup"]            # the last entry per node wins
+        for k in agg:
+            agg[k] += int(d.get(k, 0))
+        latest[nr["node"]] = d.get("node_cache") or {}
+        peer_bytes[nr["node"]] = int(d.get("node_peer_bytes", 0))
+    hits = sum(c.get("hits", 0) for c in latest.values())
+    misses = sum(c.get("misses", 0) for c in latest.values())
+    agg["cache_hits"] = hits
+    agg["cache_misses"] = misses
+    agg["cache_hit_rate"] = hits / (hits + misses) if hits + misses else 0.0
+    agg["cache_evictions"] = sum(c.get("evictions", 0)
+                                 for c in latest.values())
+    agg["peer_bytes"] = sum(peer_bytes.values())
+    return agg
 
 
 @dataclass
@@ -188,6 +227,12 @@ class DistWaveHandle(WaveHandle):
              "stage_hidden_s": (s.rec.extra.get("stage", {}).get("hidden_s",
                                                                  0.0)
                                 if s.rec else 0.0),
+             "stage_bytes": (s.rec.extra.get("stage", {}).get("bytes", 0)
+                             if s.rec else 0),
+             "stage_bytes_on_wire": (s.rec.extra.get("stage", {}).get(
+                 "bytes_on_wire", 0) if s.rec else 0),
+             "stage_dedup": (s.rec.extra.get("stage", {}).get("dedup")
+                             if s.rec else None),
              "compile_source": (s.rec.extra.get("compile_source")
                                 if s.rec else None)}
             for s in self.shards]
@@ -206,9 +251,16 @@ class DistWaveHandle(WaveHandle):
         self.rec.t_stage = max(visible, 0.0)
         self.rec.t_spawn = max(wall - self.rec.t_stage, 0.0)
         if stage_wall > 0:
+            nrs = self.rec.extra["node_records"]
+            wire = sum(nr["stage_bytes_on_wire"] for nr in nrs)
+            delivered = sum(nr["stage_bytes"] for nr in nrs)
             self.rec.extra["stage"] = {
                 "wall_s": stage_wall, "hidden_s": stage_hidden,
-                "hidden_frac": stage_hidden / stage_wall}
+                "hidden_frac": stage_hidden / stage_wall,
+                "bytes_on_wire": wire, "bytes_delivered": delivered}
+            dedup = _dedup_rollup(nrs)
+            if dedup is not None:
+                self.rec.extra["stage"]["dedup"] = dedup
         # measured capacity re-weighting: feed clean shards' walls into
         # the registry's per-node cost EWMA (failed-over shards carry
         # detection + requeue latency, not node speed)
@@ -237,7 +289,8 @@ class DistWaveHandle(WaveHandle):
             target = self.fabric.pick_node(exclude=s.history)
             s.task.cancel()
             s.task = self.fabric.submit_shard(
-                target, self.fn, s.chunk, s.hi - s.lo, self.inner_lanes)
+                target, self.fn, s.chunk, s.hi - s.lo, self.inner_lanes,
+                row_offset=s.lo)
             s.node_id = target.node_id
             s.t_submit = time.perf_counter()
             s.failed = False
@@ -286,8 +339,13 @@ class DistributedBackend:
                  heartbeat_s: Optional[float] = None,
                  inner_lanes: Optional[int] = None,
                  overlap_staging: bool = True,
+                 stage_dedup: bool = True,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES,
                  reweight: bool = True,
                  min_weight_frac: float = 0.05,
+                 reweight_deadband: float = 0.15,
+                 split_hysteresis: float = 0.3,
                  target_first_result_s: Optional[float] = None):
         """Pass ready ``nodes`` (agents already registered with
         ``registry``) or let the backend spawn ``n_nodes`` local agents
@@ -301,10 +359,26 @@ class DistributedBackend:
         shared by all thread nodes. ``overlap_staging=False`` disables
         the STAGE-ahead path (payloads ride inside SUBMIT and stage on
         the worker's critical path — the unoverlapped baseline the
-        ``fig_dist`` benchmark contrasts). ``reweight=False`` freezes the
+        ``fig_dist`` benchmark contrasts). ``stage_dedup`` (default on;
+        requires the overlapped path) makes staging content-addressed:
+        payloads split into ``chunk_bytes`` chunks keyed by digest, each
+        node keeps an LRU ``chunk_cache_bytes`` chunk cache, the shared
+        ``ChunkDirectory`` plans per-chunk sends (nothing / peer hint /
+        bytes), and the ``fig_stage_dedup`` benchmark gates bytes-on-
+        wire sub-linearity. ``reweight=False`` freezes the
         shard split at declared capacities; on, each node's weight is
         scaled by its measured speed, floored at ``min_weight_frac`` of
-        its declared share (a slow node shrinks, it is never starved).
+        its declared share (a slow node shrinks, it is never starved);
+        ``reweight_deadband`` keeps a node at its declared capacity while
+        its measured speed sits within that fraction of the fastest —
+        EWMA noise in a homogeneous fleet must not churn shard splits
+        (stable splits keep content-addressed chunk digests stable, so
+        repeat waves re-send nothing). ``split_hysteresis`` is the same
+        idea one level up: a re-split that would move less than that
+        fraction of the average shard keeps the PREVIOUS wave's split —
+        a few rows of rebalance never pays for the chunk-digest and
+        AOT-shape churn it causes; a genuinely slow node moves the split
+        far past the threshold and re-splits immediately.
         ``target_first_result_s`` rides along to any wave controller
         built over this backend (the serve-side SLO knob)."""
         from repro.core.compile_cache import default_cache
@@ -318,8 +392,17 @@ class DistributedBackend:
         self.transport, self._owned_transport = make_transport(transport)
         self.inner_lanes = inner_lanes
         self.overlap_staging = overlap_staging
+        self.stage_dedup = bool(stage_dedup) and overlap_staging
+        self.chunk_bytes = chunk_bytes
+        self.chunk_cache_bytes = chunk_cache_bytes
+        self.directory = (ChunkDirectory(self.registry,
+                                         node_cache_bytes=chunk_cache_bytes)
+                          if self.stage_dedup else None)
         self.reweight = reweight
         self.min_weight_frac = min_weight_frac
+        self.reweight_deadband = reweight_deadband
+        self.split_hysteresis = split_hysteresis
+        self._split_memo: Optional[tuple] = None
         self.target_first_result_s = target_first_result_s
         self.max_in_flight = max(1, depth)
         self._owned: List[Any] = []
@@ -327,6 +410,10 @@ class DistributedBackend:
         if nodes is None:
             kw: dict = {"backend_kind": node_backend,
                         "overlap_staging": overlap_staging}
+            if self.stage_dedup:
+                kw.update(stage_dedup=True, chunk_bytes=chunk_bytes,
+                          chunk_cache_bytes=chunk_cache_bytes,
+                          directory=self.directory)
             if heartbeat_s is not None:
                 kw["heartbeat_s"] = heartbeat_s
             if cache is not None:
@@ -380,10 +467,12 @@ class DistributedBackend:
         return pool[self._rr % len(pool)]
 
     def submit_shard(self, info: NodeInfo, fn: Callable, chunk: Any,
-                     n: int, inner_lanes: Optional[int]) -> ShardTask:
+                     n: int, inner_lanes: Optional[int],
+                     row_offset: int = 0) -> ShardTask:
         self.registry.record_dispatch(info.node_id, n)
         return self.agents[info.node_id].submit(fn, chunk, n,
-                                                inner_lanes=inner_lanes)
+                                                inner_lanes=inner_lanes,
+                                                row_offset=row_offset)
 
     # -- LaunchBackend -----------------------------------------------------
     def compile(self, fn: Callable, example_args: tuple,
@@ -408,9 +497,29 @@ class DistributedBackend:
         if not known:
             return [float(i.capacity) for i in infos]
         fastest = min(known)
-        return [max(i.capacity * (fastest / c if c else 1.0),
-                    self.min_weight_frac * i.capacity)
-                for i, c in zip(infos, costs)]
+        weights = []
+        for i, c in zip(infos, costs):
+            ratio = fastest / c if c else 1.0
+            if ratio >= 1.0 - self.reweight_deadband:
+                ratio = 1.0      # noise-level spread: keep splits stable
+            weights.append(max(i.capacity * ratio,
+                               self.min_weight_frac * i.capacity))
+        return weights
+
+    def _stable_split(self, n: int, ids: List[str],
+                      weights: List[float]) -> List[int]:
+        """Capacity split with hysteresis: if a fresh split would move at
+        most ``split_hysteresis`` of the average shard on any node, keep
+        the previous wave's split — identical shard boundaries keep
+        chunk digests (and compiled shapes) identical across waves."""
+        sizes = split_by_capacity(n, weights)
+        memo = self._split_memo
+        if memo is not None and memo[0] == n and memo[1] == ids:
+            threshold = max(1, int(self.split_hysteresis * n / len(sizes)))
+            if max(abs(s - m) for s, m in zip(sizes, memo[2])) <= threshold:
+                return memo[2]
+        self._split_memo = (n, ids, sizes)
+        return sizes
 
     def dispatch(self, fn: Callable, chunk: Any, n: int,
                  inner_lanes: Optional[int] = None) -> DistWaveHandle:
@@ -428,14 +537,15 @@ class DistributedBackend:
                 "dispatch with no alive nodes "
                 f"(registry: {self.registry.rollup()})")
         weights = self._weights(infos)
-        sizes = split_by_capacity(n, weights)
+        sizes = self._stable_split(n, [i.node_id for i in infos], weights)
         shards: List[_Shard] = []
         lo = 0
         for info, w in zip(infos, sizes):
             if w == 0:
                 continue
             sub = _slice_tree(chunk, lo, lo + w)
-            task = self.submit_shard(info, fn, sub, w, lanes)
+            task = self.submit_shard(info, fn, sub, w, lanes,
+                                     row_offset=lo)
             shards.append(_Shard(info.node_id, lo, lo + w, sub, task,
                                  time.perf_counter()))
             lo += w

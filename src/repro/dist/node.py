@@ -13,6 +13,19 @@ executes the previous shard (overlapped per-node staging, with the
 hidden/visible split measured against the worker's busy clock) — and a
 heartbeat thread beats until the queue drains.
 
+With ``stage_dedup`` on, the STAGE path is content-addressed
+(``repro.dist.chunks``): the send loop pickles the shard payload once,
+splits it into fixed-size chunks, and consults the fabric's
+``ChunkDirectory`` per chunk — already held by the node means send
+nothing, held by a healthy peer means send a hint (the node pulls it
+node-to-node), otherwise the bytes ride a CHUNK frame and the node
+becomes a holder. The node side reassembles against the manifest,
+verifying every chunk's digest (a mismatch fails exactly that shard
+with ``ProtocolError``), caching chunks in an LRU-by-bytes
+``ChunkCache``, and falling back to a scheduler ``CHUNK_REQ`` whenever
+its cache or a peer cannot produce a promised chunk — eviction and dead
+relays degrade to direct send, never a hang or a silent corrupt stage.
+
   host="thread"    worker threads in this process (the CI default):
                    multi-host is SIMULATED — nodes share the machine but
                    nothing else (own backend, own cache, own channel,
@@ -40,6 +53,7 @@ from __future__ import annotations
 
 import itertools
 import os
+import pickle
 import queue
 import threading
 import time
@@ -47,9 +61,13 @@ from typing import Any, Callable, List, Optional
 
 import numpy as np
 
+from repro.dist.chunks import (DEFAULT_CHUNK_BYTES,
+                               DEFAULT_CHUNK_CACHE_BYTES, ChunkDirectory,
+                               chunk_digest, chunk_split)
 from repro.dist.registry import LEFT, NodeRegistry
-from repro.dist.transport import (HEARTBEAT, LEAVE, RESULT, STAGE, SUBMIT,
-                                  InprocTransport, PayloadTooLarge,
+from repro.dist.transport import (CHUNK, CHUNK_REQ, HEARTBEAT, LEAVE, PEER,
+                                  RESULT, STAGE, SUBMIT, InprocTransport,
+                                  PayloadTooLarge, ProtocolError,
                                   TransportError, open_worker_channel)
 
 
@@ -80,6 +98,7 @@ class ShardTask:
         self.out: Any = None
         self.rec: Any = None
         self.err: Optional[BaseException] = None
+        self.wire_bytes = 0           # bytes this shard put on the wire
         self._done = threading.Event()
 
     @property
@@ -137,6 +156,10 @@ class _WorkerCtl:
         # executing — a process host's child has its own empty set, so
         # remote cancellation stays best-effort
         self.cancelled: set = set()
+        # the worker's chunk cache, when content-addressed staging is on
+        # (thread hosts share this object, so tests can apply memory
+        # pressure by clearing it)
+        self.chunk_cache: Optional[Any] = None
         self._busy_lock = threading.Lock()
         self._busy_total = 0.0
         self._busy_since: Optional[float] = None
@@ -160,8 +183,215 @@ class _WorkerCtl:
             return total
 
 
+class _ChunkAssembler:
+    """Node-side manifest assembly for content-addressed staging.
+
+    ``begin`` (receiver thread) resolves a STAGE manifest: cache hits
+    fill immediately, peer-hinted chunks are pulled on a fetch thread,
+    chunks the scheduler believed cached but the node evicted go back as
+    one CHUNK_REQ. ``on_chunk`` (receiver thread) lands scheduler-sent
+    bytes, verifying every chunk against its manifest digest — a
+    mismatch fails exactly the shards waiting on that digest
+    (``Stager.fail`` -> loud ``ProtocolError`` at ``take``), never a
+    silent corrupt stage. When a shard's last chunk lands, the blob is
+    deserialized into the stager off the worker's critical path (that
+    deserialization IS the node-local copy)."""
+
+    #: how long a shard may sit waiting for promised chunks before its
+    #: ``take`` fails — a backstop; designed failure paths (lost chunk,
+    #: digest mismatch, dead peer) resolve much sooner and loudly
+    TAKE_TIMEOUT_S = 120.0
+
+    _rank = {"w": 2, "p": 1, "c": 0}
+
+    def __init__(self, node_id: str, channel, stager, cache):
+        self.node_id = node_id
+        self._ch = channel
+        self._stager = stager
+        self._cache = cache
+        self._lock = threading.Lock()
+        self._tasks: dict = {}        # task_id -> assembly entry
+        self._want: dict = {}         # digest  -> task_ids waiting on it
+        self.stats = {"manifests": 0, "cache_hits": 0, "from_wire": 0,
+                      "from_peer": 0, "peer_bytes": 0, "requested": 0,
+                      "peer_fallbacks": 0, "mismatches": 0}
+
+    def begin(self, payload: dict) -> None:
+        task_id = payload["task_id"]
+        order = [(e[0], int(e[1])) for e in payload["chunks"]]
+        # a digest repeated in one manifest resolves once; the strongest
+        # source wins: wire (bytes already in flight) > peer > cached
+        srcs: dict = {}
+        for d, _, src in payload["chunks"]:
+            kind = src if isinstance(src, str) else "p"
+            if d not in srcs or self._rank[kind] > self._rank[srcs[d][0]]:
+                srcs[d] = (kind, None if isinstance(src, str) else src[1])
+        self._stager.promise(task_id)
+        entry = {"order": order, "parts": {}, "n_distinct": len(srcs),
+                 "mode": payload.get("mode", "blob"),
+                 "counts": {"cache": 0, "wire": 0, "peer": 0,
+                            "requested": 0}}
+        fetch, request = [], []
+        with self._lock:
+            self._tasks[task_id] = entry
+            for d, (kind, spec) in srcs.items():
+                data = self._cache.get(d)
+                if data is not None:
+                    entry["parts"][d] = data
+                    entry["counts"]["cache"] += 1
+                    continue
+                self._want.setdefault(d, set()).add(task_id)
+                if kind == "p":
+                    fetch.append((d, spec))
+                elif kind == "c":
+                    request.append(d)   # evicted since the plan: re-pull
+            done = len(entry["parts"]) == entry["n_distinct"]
+            entry["counts"]["requested"] += len(request)
+        self.stats["manifests"] += 1
+        self.stats["cache_hits"] += entry["counts"]["cache"]
+        if request:
+            self.stats["requested"] += len(request)
+            self._request(task_id, request)
+        if fetch:
+            threading.Thread(target=self._fetch, args=(task_id, fetch),
+                             daemon=True,
+                             name=f"node-{self.node_id}-fetch").start()
+        if done:
+            self._finish(task_id)
+
+    def _request(self, task_id, digests) -> None:
+        try:
+            self._ch.send(CHUNK_REQ, {"node": self.node_id,
+                                      "task_id": task_id,
+                                      "digests": list(digests)})
+        except TransportError:
+            pass                       # peer gone: the node is tearing down
+
+    def _fetch(self, task_id, jobs) -> None:
+        """Pull peer-hinted chunks; any failure (dead peer, timeout,
+        digest mismatch) falls back to one scheduler CHUNK_REQ — a bad
+        relay costs latency, never a wedged wave."""
+        from repro.dist.chunks import peer_fetch
+        fallback = []
+        for d, spec in jobs:
+            with self._lock:
+                wanted = task_id in self._want.get(d, ())
+            if not wanted:
+                continue
+            data = peer_fetch(spec, d)
+            if data is None:
+                fallback.append(d)
+                continue
+            self.stats["from_peer"] += 1
+            self.stats["peer_bytes"] += len(data)
+            self._deliver(d, data, "peer")
+        if fallback:
+            with self._lock:
+                fallback = [d for d in fallback
+                            if task_id in self._want.get(d, ())]
+                entry = self._tasks.get(task_id)
+                if entry is not None:
+                    entry["counts"]["requested"] += len(fallback)
+            if fallback:
+                self.stats["peer_fallbacks"] += len(fallback)
+                self.stats["requested"] += len(fallback)
+                self._request(task_id, fallback)
+
+    def on_chunk(self, payload: dict) -> None:
+        """A scheduler-sent CHUNK frame: verify, cache, deliver."""
+        d = payload["d"]
+        data = payload.get("data")
+        if data is None:
+            # the scheduler could not re-send (store lost it): the chunk
+            # is gone — fail the waiting shards loudly, not by timeout
+            self._fail_digest(d, ProtocolError(
+                f"chunk {d} lost: the scheduler could not re-send it"))
+            return
+        if chunk_digest(data) != d:
+            self.stats["mismatches"] += 1
+            self._fail_digest(d, ProtocolError(
+                f"chunk digest mismatch on {self.node_id}: manifest "
+                f"promised {d}, received bytes hash to "
+                f"{chunk_digest(data)} — corrupt transfer, shard dropped"))
+            return
+        self.stats["from_wire"] += 1
+        self._deliver(d, data, "wire")
+
+    def _deliver(self, d: str, data: bytes, source: str) -> None:
+        self._cache.put(d, data)
+        finished = []
+        with self._lock:
+            for task_id in self._want.pop(d, ()):
+                entry = self._tasks.get(task_id)
+                if entry is None or d in entry["parts"]:
+                    continue
+                entry["parts"][d] = data
+                entry["counts"][source] += 1
+                if len(entry["parts"]) == entry["n_distinct"]:
+                    finished.append(task_id)
+        for task_id in finished:
+            self._finish(task_id)
+
+    def _fail_digest(self, d: str, err: BaseException) -> None:
+        with self._lock:
+            tasks = self._want.pop(d, set())
+            for task_id in tasks:
+                entry = self._tasks.pop(task_id, None)
+                if entry is None:
+                    continue
+                for other, _ in entry["order"]:
+                    waiters = self._want.get(other)
+                    if waiters is not None:
+                        waiters.discard(task_id)
+                        if not waiters:
+                            self._want.pop(other, None)
+        for task_id in tasks:
+            self._stager.fail(task_id, err)
+
+    def _finish(self, task_id) -> None:
+        with self._lock:
+            entry = self._tasks.pop(task_id, None)
+        if entry is None:
+            return
+        parts, order, counts = entry["parts"], entry["order"], entry["counts"]
+
+        def produce():
+            buf = [parts[d] for d, _ in order]
+            if entry["mode"] == "rows":
+                # row-group mode: every part is an independently pickled
+                # slice along axis 0 — concatenation IS the reassembly
+                groups = [pickle.loads(b) for b in buf]
+                return (groups[0] if len(groups) == 1
+                        else np.concatenate(groups))
+            return pickle.loads(b"".join(buf))
+
+        self._stager.stage_assembled(task_id, produce, extra={"dedup": {
+            "chunks": len(order), "distinct": entry["n_distinct"],
+            "from_cache": counts["cache"], "from_wire": counts["wire"],
+            "from_peer": counts["peer"], "requested": counts["requested"],
+            # cumulative node-side snapshots (NOT additive per shard):
+            # aggregators take the latest per node
+            "node_cache": dict(self._cache.stats),
+            "node_peer_bytes": self.stats["peer_bytes"],
+        }})
+
+    def discard(self, task_id) -> None:
+        """Forget a shard (cancelled before its SUBMIT ran here)."""
+        with self._lock:
+            entry = self._tasks.pop(task_id, None)
+            if entry is not None:
+                for d, _ in entry["order"]:
+                    waiters = self._want.get(d)
+                    if waiters is not None:
+                        waiters.discard(task_id)
+                        if not waiters:
+                            self._want.pop(d, None)
+        self._stager.discard(task_id)
+
+
 def _run_shard(node_id: str, backend, stager, ctl: _WorkerCtl, channel,
-               item: dict, numpy_out: bool) -> None:
+               item: dict, numpy_out: bool,
+               assembler: Optional[_ChunkAssembler] = None) -> None:
     """Execute one SUBMIT frame's shard and report its RESULT frame."""
     task_id = item["task_id"]
     try:
@@ -170,13 +400,15 @@ def _run_shard(node_id: str, backend, stager, ctl: _WorkerCtl, channel,
             # skip the compute, but consume the staged payload so the
             # stager never leaks an orphaned chunk
             if item.get("staged"):
-                try:
-                    stager.take(task_id)
-                except KeyError:
-                    pass
+                if assembler is not None:
+                    assembler.discard(task_id)
+                stager.discard(task_id)
             return
         if item.get("staged"):
-            chunk, sinfo = stager.take(task_id)
+            chunk, sinfo = stager.take(
+                task_id,
+                timeout=(_ChunkAssembler.TAKE_TIMEOUT_S
+                         if assembler is not None else None))
         else:
             chunk, sinfo = stager.stage_inline(item["chunk"])
         ctl.busy_begin()
@@ -198,10 +430,15 @@ def _run_shard(node_id: str, backend, stager, ctl: _WorkerCtl, channel,
             out = jax.tree_util.tree_map(np.asarray, out)
         channel.send(RESULT, {"task_id": task_id, "ok": True,
                               "out": out, "rec": rec})
-    except PayloadTooLarge as e:
-        # the RESULT itself is too big for the wire: the scheduler must
-        # still hear SOMETHING, or the shard future hangs forever — send
-        # the (tiny) error form instead
+    except (PayloadTooLarge, ProtocolError) as e:
+        # PayloadTooLarge: the RESULT itself is too big for the wire;
+        # ProtocolError: chunk assembly failed loudly (digest mismatch,
+        # lost chunk). Either way the scheduler must still hear
+        # SOMETHING, or the shard future hangs forever — send the
+        # (tiny) error form. ProtocolError MUST precede the bare
+        # TransportError clause below: it subclasses it, and a swallowed
+        # mismatch would be exactly the silent corrupt stage the digest
+        # check exists to prevent.
         try:
             channel.send(RESULT, {"task_id": task_id, "ok": False,
                                   "err": repr(e)})
@@ -226,12 +463,18 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
                  cache: Optional[Any] = None,
                  cache_dir: Optional[str] = None,
                  devices: Optional[list] = None,
-                 numpy_out: bool = False) -> None:
+                 numpy_out: bool = False,
+                 stage_dedup: bool = False,
+                 chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES,
+                 peer_mode: Optional[str] = None) -> None:
     """The node side, identical for every host x transport combination:
     heartbeat thread (beats BEFORE the heavy imports — booting is not
     being dead), receiver thread (stages STAGE payloads overlapped with
     execution, queues SUBMITs, honours LEAVE), worker loop (execute +
-    report)."""
+    report). With ``stage_dedup``, the node keeps an LRU chunk cache,
+    serves it to peers (``peer_mode``: "tcp" | "inproc" | None), and
+    announces its serving endpoint in a PEER frame before anything
+    heavy imports."""
     workq: "queue.Queue" = queue.Queue()
 
     def hb_loop() -> None:
@@ -251,6 +494,27 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
     threading.Thread(target=hb_loop, daemon=True,
                      name=f"node-{node_id}-hb").start()
 
+    chunk_cache = peer_server = peer_spec = None
+    if stage_dedup:
+        from repro.dist.chunks import (ChunkCache, PeerChunkServer,
+                                       register_inproc_peer)
+        chunk_cache = ChunkCache(max_bytes=chunk_cache_bytes)
+        ctl.chunk_cache = chunk_cache
+        if peer_mode == "tcp":
+            try:
+                peer_server = PeerChunkServer(chunk_cache)
+                peer_spec = peer_server.spec
+            except OSError:
+                peer_spec = None       # can't serve peers; still dedups
+        elif peer_mode == "inproc":
+            peer_spec = register_inproc_peer(chunk_cache)
+        try:
+            channel.send(PEER, {"node": node_id,
+                                "peer": list(peer_spec)
+                                if peer_spec else None})
+        except TransportError:
+            pass
+
     # heavy imports after heartbeats start (fresh JAX runtime in a
     # process-hosted node)
     from repro.core.staging import Stager
@@ -266,6 +530,8 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
             cache=cache if cache is not None else CompileCache(
                 cache_dir=cache_dir or _node_cache_dir(node_id)))
     stager = Stager(busy_clock=ctl.busy_clock)
+    assembler = (_ChunkAssembler(node_id, channel, stager, chunk_cache)
+                 if stage_dedup else None)
 
     def recv_loop() -> None:
         while not ctl.killed.is_set():
@@ -290,7 +556,19 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
                 # staged HERE, in the receiver thread, while the worker
                 # thread executes the previous shard: this is the overlap
                 p = frame.payload
-                stager.stage(p["task_id"], p["chunk"])
+                if "chunks" in p:
+                    if assembler is None:
+                        # a manifest this node cannot assemble is a
+                        # SUBMIT it can never run: die loudly (same
+                        # contract as an undecodable frame below)
+                        ctl.killed.set()
+                        return
+                    assembler.begin(p)
+                else:
+                    stager.stage(p["task_id"], p["chunk"])
+            elif frame.kind == CHUNK:
+                if assembler is not None:
+                    assembler.on_chunk(frame.payload)
             elif frame.kind == SUBMIT:
                 workq.put(frame.payload)
             elif frame.kind == LEAVE:
@@ -313,9 +591,14 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
             if item is None:          # drained past the LEAVE sentinel
                 break
             _run_shard(node_id, backend, stager, ctl, channel, item,
-                       numpy_out)
+                       numpy_out, assembler)
         finally:
             workq.task_done()
+    if peer_server is not None:
+        peer_server.close()           # a dead/left node serves nobody
+    if peer_spec is not None and peer_spec[0] == "inproc":
+        from repro.dist.chunks import unregister_inproc_peer
+        unregister_inproc_peer(peer_spec)
     if ctl.stopping.is_set() and not ctl.killed.is_set():
         try:
             channel.send(LEAVE, node_id)
@@ -325,15 +608,21 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
 
 
 def _process_main(node_id: str, endpoint: tuple, heartbeat_s: float,
-                  backend_kind: str, cache_dir: str) -> None:
+                  backend_kind: str, cache_dir: str,
+                  stage_dedup: bool = False,
+                  chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES) -> None:
     """Entry point of a process-hosted node: connect first (cheap), beat
     while jax imports, then serve shards until LEAVE or SIGTERM."""
     channel = open_worker_channel(endpoint)
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+    # peers can only reach a process-hosted node over TCP; an inproc
+    # cache token would not resolve across the spawn boundary
+    peer_mode = "tcp" if endpoint[0] == "socket" else None
     _worker_loop(node_id, channel, _WorkerCtl(), heartbeat_s,
                  backend_kind=backend_kind, cache_dir=cache_dir,
-                 numpy_out=True)
+                 numpy_out=True, stage_dedup=stage_dedup,
+                 chunk_cache_bytes=chunk_cache_bytes, peer_mode=peer_mode)
 
 
 class NodeAgent:
@@ -354,6 +643,10 @@ class NodeAgent:
                  devices: Optional[list] = None,
                  heartbeat_s: Optional[float] = None,
                  overlap_staging: bool = True,
+                 stage_dedup: bool = False,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES,
+                 directory: Optional[ChunkDirectory] = None,
                  start: bool = True):
         if host not in ("thread", "process"):
             raise ValueError(f"unknown node host {host!r}; "
@@ -367,6 +660,16 @@ class NodeAgent:
         self.heartbeat_s = heartbeat_s if heartbeat_s is not None \
             else (0.02 if host == "thread" else 0.05)
         self.overlap_staging = overlap_staging
+        # content-addressed staging rides the overlapped STAGE path; the
+        # inline (overlap_staging=False) baseline stays point-to-point
+        self.stage_dedup = bool(stage_dedup) and overlap_staging
+        self.chunk_bytes = chunk_bytes
+        self.chunk_cache_bytes = chunk_cache_bytes
+        if self.stage_dedup and directory is None:
+            directory = ChunkDirectory(registry,
+                                       node_cache_bytes=chunk_cache_bytes)
+        self.directory = directory
+        self._peer_ready = threading.Event()
         self.devices = devices
         self._killed = False
         self._stopping = False
@@ -411,7 +714,8 @@ class NodeAgent:
             self._proc = ctx.Process(
                 target=_process_main,
                 args=(node_id, self._port.endpoint, self.heartbeat_s,
-                      backend_kind, cache_dir),
+                      backend_kind, cache_dir, self.stage_dedup,
+                      self.chunk_cache_bytes),
                 daemon=True)
         if start:
             self.start()
@@ -421,12 +725,17 @@ class NodeAgent:
         self.registry.register(self.node_id, self.capacity)
         if self.host == "thread":
             endpoint = self._port.endpoint
+            peer_mode = ("tcp" if getattr(self.transport, "name", "")
+                         == "socket" else "inproc")
 
             def thread_main():
                 channel = open_worker_channel(endpoint)
                 _worker_loop(self.node_id, channel, self._ctl,
                              self.heartbeat_s, backend=self.backend,
-                             numpy_out=self._numpy_out)
+                             numpy_out=self._numpy_out,
+                             stage_dedup=self.stage_dedup,
+                             chunk_cache_bytes=self.chunk_cache_bytes,
+                             peer_mode=peer_mode)
 
             t = threading.Thread(target=thread_main, daemon=True,
                                  name=f"node-{self.node_id}-worker")
@@ -441,6 +750,11 @@ class NodeAgent:
                                  name=f"node-{self.node_id}-{target.__name__}")
             t.start()
             self._threads.append(t)
+        if self.stage_dedup:
+            # the node's PEER frame is its first post-handshake message;
+            # waiting for it lets the very first wave fan out peer-to-
+            # peer (missing it degrades to direct send, never an error)
+            self._peer_ready.wait(timeout=2.0)
         return self
 
     def kill(self) -> None:
@@ -454,6 +768,12 @@ class NodeAgent:
                 self._proc.terminate()
         else:
             self._ctl.killed.set()
+        if self.directory is not None:
+            with self._lock:
+                pending = list(self._pending)
+            for task_id in pending:
+                self._unpin(task_id)
+            self.directory.drop_node(self.node_id)
         # the host is gone, and its connection goes with it (over TCP the
         # FIN is physical reality, not an announcement)
         if self._ch is not None:
@@ -509,31 +829,115 @@ class NodeAgent:
 
     # -- scheduler-side protocol pumps --------------------------------------
     def submit(self, fn: Callable, chunk: Any, n: int,
-               inner_lanes: Optional[int] = None) -> ShardTask:
+               inner_lanes: Optional[int] = None,
+               row_offset: int = 0) -> ShardTask:
         """Enqueue one shard. Returns immediately: the payload travels
         through the async outbox (a STAGE frame ahead of a tiny SUBMIT
         when staging overlap is on), so serialization and transfer happen
-        while earlier waves execute."""
+        while earlier waves execute. ``row_offset`` is the shard's global
+        position in its wave — content-addressed staging aligns its chunk
+        boundaries to it, so the same rows yield the same digests however
+        the wave was split."""
         task = ShardTask(fn, chunk, n, inner_lanes)
-        if self._ctl is not None:
-            # thread hosts share the ctl object with their worker: a
-            # scheduler-side cancel reaches the execution loop directly
-            task._on_cancel = self._ctl.cancelled.add
+        task._on_cancel = self._cancel_hook
         with self._lock:
             self._pending[task.task_id] = task
-        if self._numpy_out:
+        if self._numpy_out or self.stage_dedup:
+            # picklable for the wire; for dedup also byte-stable, so
+            # identical shard content yields identical chunk digests
             import jax
-            chunk = jax.tree_util.tree_map(np.asarray, chunk)  # picklable
+            chunk = jax.tree_util.tree_map(np.asarray, chunk)
         sub = {"task_id": task.task_id, "fn": fn, "n": n,
                "inner_lanes": inner_lanes}
         if self.overlap_staging:
             self._outbox.put((STAGE, {"task_id": task.task_id,
-                                      "chunk": chunk}, task))
+                                      "chunk": chunk,
+                                      "off": row_offset}, task))
             sub["staged"] = True
         else:
             sub["chunk"] = chunk
         self._outbox.put((SUBMIT, sub, task))
         return task
+
+    def _cancel_hook(self, task_id) -> None:
+        if self._ctl is not None:
+            # thread hosts share the ctl object with their worker: a
+            # scheduler-side cancel reaches the execution loop directly
+            self._ctl.cancelled.add(task_id)
+        self._unpin(task_id)
+
+    def _unpin(self, task_id) -> None:
+        if self.directory is not None:
+            self.directory.unpin_task((self.node_id, task_id))
+
+    @staticmethod
+    def _stage_parts(chunk: Any, eff: int, off: int = 0) -> tuple:
+        """-> (mode, parts): the shard payload serialized for
+        content-addressed staging. An ndarray payload is pickled as
+        fixed-size ROW GROUPS along axis 0, with group boundaries
+        aligned to the shard's GLOBAL row offset in its wave: the same
+        rows produce the same digests whatever slice boundaries the
+        capacity-weighted split chose, so measured re-weighting shifting
+        every shard between waves invalidates at most the two boundary
+        groups per shard, and a repeat wave re-sends (almost) nothing.
+        Anything else falls back to one pickle byte-split at ``eff``."""
+        if (isinstance(chunk, np.ndarray) and chunk.ndim >= 1
+                and chunk.shape[0] > 1 and chunk.nbytes > 0):
+            stride = max(chunk.nbytes // chunk.shape[0], 1)
+            rows = max(1, eff // stride)
+            if rows < chunk.shape[0]:
+                # first boundary at the next global multiple of ``rows``
+                first = (rows - off % rows) % rows or rows
+                starts = list(range(first, chunk.shape[0], rows))
+                return "rows", [
+                    pickle.dumps(np.ascontiguousarray(chunk[i:j]),
+                                 protocol=pickle.HIGHEST_PROTOCOL)
+                    for i, j in zip([0] + starts,
+                                    starts + [chunk.shape[0]])]
+        blob = pickle.dumps(chunk, protocol=pickle.HIGHEST_PROTOCOL)
+        return "blob", chunk_split(blob, eff)
+
+    def _send_stage_dedup(self, payload: dict, task: ShardTask) -> int:
+        """Content-addressed STAGE: serialize the shard payload into
+        digest-keyed chunks and send per the directory's plan — nothing
+        for chunks the node holds, a peer hint for chunks a healthy
+        holder can serve, bytes otherwise. Returns bytes put on the
+        wire. An over-cap payload raises ``PayloadTooLarge`` before ANY
+        frame goes out (the cap bounds the shard, not just a frame —
+        chunking must not smuggle oversized waves past it)."""
+        task_id = payload["task_id"]
+        cap = self._ch.max_frame_bytes
+        # keep every CHUNK frame (body + framing overhead) under the cap
+        eff = max(1, min(self.chunk_bytes, cap - 4096))
+        mode, parts = self._stage_parts(payload["chunk"], eff,
+                                        payload.get("off", 0))
+        total = sum(len(p) for p in parts)
+        if total > cap:
+            raise PayloadTooLarge(
+                f"STAGE payload {total} bytes exceeds the frame cap "
+                f"{cap}")
+        manifest, to_wire, seen = [], [], {}
+        for data in parts:
+            d = chunk_digest(data)
+            if d not in seen:
+                self.directory.store_put(d, data)
+                plan = self.directory.plan(self.node_id, d, len(data))
+                if plan == "wire":
+                    to_wire.append((d, data))
+                    seen[d] = "w"
+                elif plan == "cached":
+                    seen[d] = "c"
+                else:
+                    seen[d] = ["p", list(plan[1])]
+            manifest.append([d, len(data), seen[d]])
+        # pinned until the shard resolves: a CHUNK_REQ for an evicted or
+        # relay-failed chunk must always be answerable from the store
+        self.directory.pin_task((self.node_id, task_id), seen)
+        wire = self._ch.send(STAGE, {"task_id": task_id,
+                                     "chunks": manifest, "mode": mode})
+        for d, data in to_wire:
+            wire += self._ch.send(CHUNK, {"d": d, "data": data})
+        return wire
 
     def _send_loop(self) -> None:
         skipped: set = set()
@@ -558,12 +962,18 @@ class NodeAgent:
                         or (task.cancelled and not payload.get("staged"))):
                     continue
             try:
-                self._ch.send(kind, payload)
+                if kind == STAGE and self.stage_dedup:
+                    task.wire_bytes += self._send_stage_dedup(payload, task)
+                else:
+                    sent = self._ch.send(kind, payload)
+                    if task is not None:
+                        task.wire_bytes += sent
             except PayloadTooLarge as e:
                 # rejected before the wire: fail the shard loudly — the
                 # paired frame is skipped via task.ready above
                 if task is not None:
                     task.set_error(e)
+                    self._unpin(task.task_id)
             except TransportError:
                 return                # peer gone; the pump condemns it
             except Exception as e:  # noqa: BLE001 — payload-specific
@@ -572,17 +982,43 @@ class NodeAgent:
                 # channel is intact — fail just this shard, keep sending
                 if task is not None:
                     task.set_error(e)
+                    self._unpin(task.task_id)
 
     def _on_result(self, payload: dict) -> None:
         with self._lock:
             task = self._pending.pop(payload["task_id"], None)
         if task is None or self._killed:
             return
+        self._unpin(payload["task_id"])
         if payload.get("ok"):
-            task.set_result(payload["out"], payload["rec"])
+            rec = payload["rec"]
+            if rec is not None and task.wire_bytes:
+                # the scheduler-side half of the dedup split: the node
+                # reported bytes DELIVERED, this is what the wire carried
+                rec.extra.setdefault("stage", {})[
+                    "bytes_on_wire"] = task.wire_bytes
+            task.set_result(payload["out"], rec)
         else:
             task.set_error(RuntimeError(
                 f"node {self.node_id} shard failed: {payload['err']}"))
+
+    def _on_chunk_req(self, payload: dict) -> None:
+        """The node cannot produce chunks its manifest promised (evicted
+        under memory pressure, or a peer relay failed): correct the
+        directory's model and re-send from the authoritative store. A
+        chunk the store ALSO lost goes out as an explicit tombstone so
+        the shard fails loudly instead of timing out."""
+        if self.directory is None:
+            return
+        digests = list(payload.get("digests") or ())
+        self.directory.forget(self.node_id, digests)
+        with self._lock:
+            task = self._pending.get(payload.get("task_id"))
+        for d in digests:
+            data = self.directory.store_get(d)
+            if data is not None:
+                self.directory.record(self.node_id, d, len(data))
+            self._outbox.put((CHUNK, {"d": d, "data": data}, task))
 
     def _pump(self) -> None:
         """Scheduler-side frame router: heartbeats renew the lease,
@@ -596,6 +1032,8 @@ class NodeAgent:
             except TransportError:
                 if not self._killed and not self._stopping:
                     self.registry.expire(self.node_id)
+                if self.directory is not None:
+                    self.directory.drop_node(self.node_id)
                 return
             if frame is None:
                 if self._stopping and not self._pending:
@@ -615,7 +1053,16 @@ class NodeAgent:
                     self.registry.heartbeat(self.node_id)
             elif frame.kind == RESULT:
                 self._on_result(frame.payload)
+            elif frame.kind == CHUNK_REQ:
+                self._on_chunk_req(frame.payload)
+            elif frame.kind == PEER:
+                if self.directory is not None:
+                    self.directory.set_peer(self.node_id,
+                                            frame.payload.get("peer"))
+                self._peer_ready.set()
             elif frame.kind == LEAVE:
+                if self.directory is not None:
+                    self.directory.drop_node(self.node_id)
                 self.registry.deregister(self.node_id)
                 return
 

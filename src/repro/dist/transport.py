@@ -3,7 +3,7 @@
 The paper's scheduler talks to its nodes over a real interconnect; what
 makes LLMapReduce-style launch portable is that the SCHEDULER POLICY
 never sees the interconnect — only a small message protocol. This module
-is that separation for ``repro.dist``: five frame kinds
+is that separation for ``repro.dist``: eight frame kinds
 
   ``SUBMIT``     scheduler -> node: run one wave shard (tiny — when
                  staging overlap is on, the payload travelled ahead in a
@@ -16,7 +16,23 @@ is that separation for ``repro.dist``: five frame kinds
   ``STAGE``      scheduler -> node: a shard's input payload, streamed
                  ahead of its SUBMIT so node-side staging overlaps with
                  the previous wave's execution (Fig 5's copy time hidden
-                 under compute)
+                 under compute). With content-addressed staging on, the
+                 payload is a MANIFEST — an ordered list of
+                 ``[digest, size, source]`` chunk entries — and the
+                 bytes themselves ride CHUNK frames only when the node
+                 does not already hold them
+  ``CHUNK``      scheduler -> node: one content-addressed chunk
+                 (``{"d": digest, "data": bytes}``); nodes verify the
+                 digest on receipt — a mismatch fails exactly the shards
+                 waiting on it (``ProtocolError``), never a silent
+                 corrupt stage
+  ``CHUNK_REQ``  node -> scheduler: digests a manifest promised from the
+                 node's cache (or a peer) that it cannot produce — the
+                 scheduler re-sends them as CHUNK frames, so eviction
+                 and dead peers degrade to direct send, never a hang
+  ``PEER``       node -> scheduler: the node's chunk-serving endpoint;
+                 the scheduler's chunk directory uses it to point other
+                 nodes at this one for hot chunks (the fan-out tree)
   ``LEAVE``      either direction: graceful-leave request (scheduler ->
                  node: please drain) or announcement (node -> scheduler:
                  drained, deregister me — never a failure)
@@ -63,11 +79,15 @@ SUBMIT = "SUBMIT"
 RESULT = "RESULT"
 HEARTBEAT = "HEARTBEAT"
 STAGE = "STAGE"
+CHUNK = "CHUNK"
+CHUNK_REQ = "CHUNK_REQ"
+PEER = "PEER"
 LEAVE = "LEAVE"
 _CLOSE = "_CLOSE"                     # inproc-internal EOF sentinel
 
 _KIND_CODE = {SUBMIT: b"S", RESULT: b"R", HEARTBEAT: b"H",
-              STAGE: b"G", LEAVE: b"L"}
+              STAGE: b"G", CHUNK: b"C", CHUNK_REQ: b"Q",
+              PEER: b"P", LEAVE: b"L"}
 _CODE_KIND = {v: k for k, v in _KIND_CODE.items()}
 
 #: default frame cap — far above any sane wave shard, far below "the
@@ -174,7 +194,10 @@ class InprocChannel:
         self.max_frame_bytes = max_frame_bytes
         self.closed = False
 
-    def send(self, kind: str, payload: Any = None) -> None:
+    def send(self, kind: str, payload: Any = None) -> int:
+        """Enqueue one frame; returns the frame's approximate size in
+        bytes (payloads pass by reference, so the estimate is what the
+        fabric's bytes-on-wire accounting charges this send)."""
         if self.closed:
             raise ChannelClosed("send on a closed channel")
         size = _approx_payload_bytes(payload)
@@ -183,6 +206,7 @@ class InprocChannel:
                 f"{kind} payload ~{size} bytes exceeds the frame cap "
                 f"{self.max_frame_bytes}")
         self._send_q.put(Frame(kind, payload))
+        return size + 8
 
     def recv(self, timeout: Optional[float] = None) -> Optional[Frame]:
         if self.closed:
@@ -227,7 +251,10 @@ class SocketChannel:
         self._buf = bytearray()
         self.closed = False
 
-    def send(self, kind: str, payload: Any = None) -> None:
+    def send(self, kind: str, payload: Any = None) -> int:
+        """Write one frame; returns the exact bytes put on the wire
+        (length prefix + kind + codec + body) for the fabric's
+        bytes-on-wire accounting."""
         codec, body = _encode(payload)
         if len(body) > self.max_frame_bytes:
             raise PayloadTooLarge(
@@ -243,6 +270,7 @@ class SocketChannel:
             except OSError as e:
                 self.closed = True
                 raise ChannelClosed(f"peer gone mid-send: {e}") from e
+        return len(frame)
 
     def _parse_one(self) -> Optional[Frame]:
         if len(self._buf) < 4:

@@ -356,21 +356,12 @@ def test_launch_rate_array_beats_serial():
     assert t_serial > 3.0 * t_array, (t_serial, t_array)
 
 
-def test_deprecated_scheduler_aliases_warn_but_work():
-    """The seed-era shims are retired: constructing one must WARN (every
-    in-repo caller now goes through ``make_backend``), while still
-    behaving — a deprecation, not a break."""
-    from repro.core.scheduler import ArrayScheduler, SerialScheduler
-
-    inputs = np.ones((6, 4), np.float32)
-    with pytest.warns(DeprecationWarning, match="SerialScheduler"):
-        outs, rec = SerialScheduler().launch(app, inputs, 6)
-    assert len(outs) == 6
-    with pytest.warns(DeprecationWarning, match="make_backend"):
-        sched = ArrayScheduler()
-    out, rec = sched.launch(app, inputs, 6)
-    np.testing.assert_allclose(np.asarray(out), np.full(6, 8.0))
-    assert isinstance(sched._cache, dict) and sched._cache  # compat view
+def test_deprecated_scheduler_shim_is_gone():
+    """The seed-era ``repro.core.scheduler`` shim (deprecated since the
+    transport-fabric PR) is removed for good: importing it must fail —
+    every caller goes through ``make_backend``."""
+    with pytest.raises(ImportError):
+        import repro.core.scheduler  # noqa: F401
 
 
 def test_launch_model_headline():
