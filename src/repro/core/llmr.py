@@ -393,6 +393,19 @@ class LLMapReduce:
             itself is overdue — or no baseline exists yet — does the
             driver hard-block, so readiness polling that never comes true
             (a poll-less handle) still terminates."""
+            # push-aware wait: a distributed backend exposes a
+            # wave_event its transport pump sets the instant a shard
+            # RESULT lands — waiting on it turns the poll tick into a
+            # wakeup; backends without one degrade to the plain sleep
+            wake = getattr(self.backend, "wave_event", None)
+
+            def _pause(seconds: float) -> None:
+                if wake is not None:
+                    wake.wait(timeout=seconds)
+                    wake.clear()
+                else:
+                    time.sleep(seconds)
+
             tick = 1e-4            # adaptive poll tick: tight while the
             while slots:           # wave is fresh, backing off toward 2ms
                 if sweep():
@@ -405,7 +418,7 @@ class LLMapReduce:
                     # barrier; keep polling so sweep() can detect the
                     # lease expiry and re-dispatch instead)
                     if any(h.can_fail for h in oldest.attempts):
-                        time.sleep(min(tick, 1e-3))
+                        _pause(min(tick, 1e-3))
                         tick = min(tick * 2, 2e-3)
                         continue
                     harvest(oldest, 0)
@@ -427,7 +440,7 @@ class LLMapReduce:
                     return
                 # wait the shorter of a poll tick or the time left until
                 # the slot's next escalation point
-                time.sleep(min(tick, 1e-3))
+                _pause(min(tick, 1e-3))
                 tick = min(tick * 2, 2e-3)
 
         # -- drive -------------------------------------------------------

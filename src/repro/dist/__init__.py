@@ -11,8 +11,14 @@ barrier-free speculative re-dispatch.
                  CHUNK/CHUNK_REQ/PEER/LEAVE frames, msgpack-or-pickle
                  payloads, explicit size caps) over two carriers:
                  ``InprocTransport`` (queue pairs) and
-                 ``SocketTransport`` (length-prefixed frames over
-                 localhost TCP, one connection per node).
+                 ``SocketTransport`` (length-prefixed frames over TCP,
+                 one connection per node, configurable bind/advertise
+                 addresses, optional shared-secret HMAC handshake).
+  ``pump``       FramePump: ONE selector-driven event-loop thread owning
+                 every scheduler-side node connection — non-blocking
+                 writes, per-connection send queues, incremental frame
+                 reassembly, HEARTBEAT coalescing. 1,000 nodes cost one
+                 thread and O(fds), not 2,000 threads.
   ``chunks``     content-addressed staging: digest-keyed chunking, the
                  node-side LRU ``ChunkCache``, the scheduler-side
                  ``ChunkDirectory`` (dedup planning + peer hints), and
@@ -37,11 +43,13 @@ from repro.dist.chunks import (DEFAULT_CHUNK_BYTES,
                                DEFAULT_CHUNK_CACHE_BYTES, ChunkCache,
                                ChunkDirectory, chunk_digest, chunk_split)
 from repro.dist.node import NodeAgent, ProcessNodeAgent, spawn_local_nodes
+from repro.dist.pump import FramePump
 from repro.dist.registry import (ALIVE, DEAD, LEFT, SUSPECT, NodeInfo,
                                  NodeRegistry)
 from repro.dist.transport import (ChannelClosed, Frame, InprocTransport,
                                   PayloadTooLarge, ProtocolError,
                                   SocketTransport, TransportError,
+                                  encode_frame, handshake_mac,
                                   make_transport)
 
 __all__ = [
@@ -49,7 +57,9 @@ __all__ = [
     "ChunkCache", "ChunkDirectory", "chunk_digest", "chunk_split",
     "DEFAULT_CHUNK_BYTES", "DEFAULT_CHUNK_CACHE_BYTES",
     "NodeAgent", "ProcessNodeAgent", "spawn_local_nodes",
+    "FramePump",
     "NodeRegistry", "NodeInfo", "ALIVE", "SUSPECT", "DEAD", "LEFT",
     "Frame", "InprocTransport", "SocketTransport", "make_transport",
+    "encode_frame", "handshake_mac",
     "TransportError", "ChannelClosed", "PayloadTooLarge", "ProtocolError",
 ]

@@ -51,7 +51,9 @@ Under the LaunchBackend protocol sit two more measured mechanisms:
 """
 from __future__ import annotations
 
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -61,7 +63,7 @@ from repro.core.telemetry import LaunchRecord, Timer
 from repro.core.backend import WaveHandle, concat_outputs
 from repro.dist.chunks import (DEFAULT_CHUNK_BYTES,
                                DEFAULT_CHUNK_CACHE_BYTES, ChunkDirectory)
-from repro.dist.node import ShardTask, spawn_local_nodes
+from repro.dist.node import NodeAgent, ShardTask, spawn_local_nodes
 from repro.dist.registry import DEAD, LEFT, NodeInfo, NodeRegistry
 from repro.dist.transport import make_transport
 
@@ -145,7 +147,15 @@ class _Shard:
 class DistWaveHandle(WaveHandle):
     """Composite handle over per-node shards: partial-wave harvest,
     dead-node detection (``failed()``), shard-level failover in
-    ``result()``."""
+    ``result()``.
+
+    Harvesting is PUSH-driven: every shard task carries a done callback
+    (fired by the transport's frame pump the instant its RESULT frame
+    lands) that appends to this handle's completion queue, so a poll
+    drains O(completed-since-last-poll) instead of scanning every
+    in-flight future — the property that keeps the driver loop flat at
+    fleet width. Only dead-NODE detection still scans (throttled: node
+    health changes at heartbeat cadence, not poll cadence)."""
 
     can_fail = True          # the policy layer may see failed() turn True
 
@@ -158,35 +168,66 @@ class DistWaveHandle(WaveHandle):
         self.shards = shards
         self.inner_lanes = inner_lanes
         self._last_refresh = 0.0
+        self._done_q: deque = deque()
+        self._n_done = 0
+        self._task_err: Optional[BaseException] = None
+        for s in shards:
+            self._watch(s)
+
+    def _watch(self, shard: _Shard) -> None:
+        """Subscribe to a shard task's completion (re-called with the new
+        task after failover; a stale task's late callback is recognised
+        by identity and dropped at drain time)."""
+        task = shard.task
+
+        def _on_done(t, shard=shard):
+            self._done_q.append((shard, t))
+            self.fabric.wave_event.set()
+
+        task.add_done_callback(_on_done)
 
     # -- liveness ----------------------------------------------------------
     def _refresh(self) -> None:
-        """Harvest every completed shard (partial-wave harvest) and mark
+        """Drain the completion queue (partial-wave harvest) and mark
         shards stranded on dead nodes. A shard error (the task itself
         raised) propagates — re-running a broken program elsewhere would
         only fail again."""
-        pending = [s for s in self.shards if not s.done and not s.failed]
-        if not pending:
+        if self._task_err is not None:
+            raise self._task_err
+        while True:
+            try:
+                shard, task = self._done_q.popleft()
+            except IndexError:
+                break
+            # identity check: after a failover the shard's CURRENT task
+            # is what counts — a cancelled predecessor resolving late
+            # (zombie compute) must not double-deliver; likewise a shard
+            # already failed over keeps its re-dispatch
+            if shard.task is not task or shard.done or shard.failed:
+                continue
+            if task.err is not None:
+                self._task_err = task.err
+                raise task.err
+            shard.out, shard.rec = task.out, task.rec
+            shard.done = True
+            shard.t_done = time.perf_counter()
+            self._n_done += 1
+            if self._t_first is None:
+                self._t_first = shard.t_done - self.t0
+        if self._n_done >= len(self.shards):
             return
-        # throttle: the driver polls, failure-checks, and live-checks the
-        # same handle within one sub-millisecond tick — one scan serves
-        # them all (shard state only changes at node/heartbeat cadence)
+        # throttle the dead-node scan: the driver polls, failure-checks,
+        # and live-checks the same handle within one sub-millisecond
+        # tick, but node health only changes at heartbeat cadence
         now = time.perf_counter()
         if now - self._last_refresh < 1e-3:
             return
         self._last_refresh = now
         states: Optional[Dict[str, str]] = None
-        for s in pending:
-            if s.task.ready:
-                if s.task.err is not None:
-                    raise s.task.err
-                s.out, s.rec = s.task.out, s.task.rec
-                s.done = True
-                s.t_done = time.perf_counter()
-                if self._t_first is None:
-                    self._t_first = s.t_done - self.t0
+        for s in self.shards:
+            if s.done or s.failed:
                 continue
-            if states is None:        # ONE sweep per refresh, not per node
+            if states is None:        # ONE sweep per refresh, not per shard
                 states = self.fabric.registry.states()
             # DEAD = lease expired; LEFT with an undelivered shard means
             # the node crashed mid-drain — either way, nobody will deliver
@@ -207,7 +248,7 @@ class DistWaveHandle(WaveHandle):
         if self._harvested:
             return True
         self._refresh()
-        if all(s.done for s in self.shards):
+        if self._n_done >= len(self.shards):
             self._finalize()
             return True
         return False
@@ -295,6 +336,7 @@ class DistWaveHandle(WaveHandle):
             s.t_submit = time.perf_counter()
             s.failed = False
             s.attempts += 1
+            self._watch(s)            # subscribe to the re-dispatched task
             moved += 1
             self.rec.extra.setdefault("failover", []).append(
                 {"span": (s.lo, s.hi), "from": s.history[-1],
@@ -305,10 +347,15 @@ class DistWaveHandle(WaveHandle):
         """Block until the wave completes, failing stranded shards over to
         surviving nodes as leases expire (standalone callers get recovery
         even without the policy layer's re-dispatch)."""
+        wake = self.fabric.wave_event
         while not self.poll():
             if self.failed():
                 self.failover()
-            time.sleep(5e-4)
+            # push-driven: the pump's RESULT callback sets the event, so
+            # the common case wakes in microseconds; the timeout is only
+            # the dead-node detection cadence
+            wake.wait(timeout=2e-3)
+            wake.clear()
         return self.out, self.rec
 
     def abandon(self):
@@ -333,6 +380,7 @@ class DistributedBackend:
                  node_backend: str = "array",
                  node_mode: str = "thread",
                  transport: Any = "inproc",
+                 transport_options: Optional[dict] = None,
                  capacities: Optional[List[int]] = None,
                  depth: int = 2,
                  heartbeat_timeout_s: float = 0.5,
@@ -352,8 +400,14 @@ class DistributedBackend:
         (thread mode by default; ``node_mode="process"`` for real
         multiprocessing workers). ``transport`` is the wire the fabric
         speaks: ``"inproc"`` (queue pairs), ``"socket"`` (length-prefixed
-        frames over localhost TCP, one connection per node), or a ready
+        frames over TCP, one connection per node), or a ready
         transport instance shared with externally-built agents.
+        ``transport_options`` forwards kwargs to the transport factory —
+        for ``"socket"``: ``bind_host``/``port`` (listen address,
+        ``"0.0.0.0"`` to accept remote nodes), ``advertise_host`` (what
+        remote peers dial), ``secret`` (shared HMAC key; every joining
+        node must answer the challenge or its connection is dropped
+        before a single frame is processed).
         ``cache=None`` gives every spawned node its OWN ``CompileCache``
         (the paper's node-local staging disk); an explicit cache is
         shared by all thread nodes. ``overlap_staging=False`` disables
@@ -389,7 +443,12 @@ class DistributedBackend:
         self.cache = cache if cache is not None else default_cache()
         self.registry = registry if registry is not None else NodeRegistry(
             heartbeat_timeout_s=heartbeat_timeout_s)
-        self.transport, self._owned_transport = make_transport(transport)
+        self.transport, self._owned_transport = make_transport(
+            transport, **(transport_options or {}))
+        # set by the frame pump whenever ANY shard completes: wave
+        # handles (and the driver's drain loop) block on this instead of
+        # sleep-polling, so result latency is wakeup latency
+        self.wave_event = threading.Event()
         self.inner_lanes = inner_lanes
         self.overlap_staging = overlap_staging
         self.stage_dedup = bool(stage_dedup) and overlap_staging
@@ -430,6 +489,29 @@ class DistributedBackend:
                                       transport=self.transport, **kw)
             self._owned = list(nodes)
         self.agents: Dict[str, Any] = {a.node_id: a for a in nodes}
+        # elastic remote join: a socket transport hands connections it
+        # was not told to expect to this hook — each becomes a
+        # host="remote" agent (scheduler-side bookkeeping only; the
+        # worker loop runs in the remote process)
+        if hasattr(self.transport, "on_unclaimed"):
+            self.transport.on_unclaimed = self._admit_remote
+
+    def _admit_remote(self, node_id: str, capacity: Any, channel: Any):
+        """Admit a self-registered remote node (``python -m
+        repro.dist.node --connect``): build the scheduler-side agent over
+        the already-authenticated channel and enter the elastic-join
+        path."""
+        agent = NodeAgent(node_id, self.registry,
+                          capacity=int(capacity or 1),
+                          transport=self.transport, host="remote",
+                          channel=channel,
+                          overlap_staging=self.overlap_staging,
+                          stage_dedup=self.stage_dedup,
+                          chunk_bytes=self.chunk_bytes,
+                          chunk_cache_bytes=self.chunk_cache_bytes,
+                          directory=self.directory)
+        self.add_node(agent)
+        return agent
 
     # -- fleet -------------------------------------------------------------
     @property

@@ -228,7 +228,9 @@ class ChunkDirectory:
     def _alive_locked(self, node_id: str) -> bool:
         if self.registry is None:
             return True
-        info = self.registry.nodes.get(node_id)
+        # info() is the O(1) sharded lookup: plan() runs per (node,
+        # chunk), so at fleet width a full-table read here would melt
+        info = self.registry.info(node_id)
         return info is not None and info.state == "alive"
 
     def _pick_peer_locked(self, node_id: str, digest: str):
@@ -342,18 +344,28 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 class PeerChunkServer:
-    """Node-side chunk server: one ephemeral loopback port, request =
+    """Node-side chunk server: one ephemeral port, request =
     ``!H``-prefixed digest hex, reply = ``!I``-prefixed chunk bytes
     (length 0 = miss). A requested chunk that has not landed yet is
     waited for briefly — the peer was hinted here by the scheduler, so
-    the bytes are normally already in flight to us."""
+    the bytes are normally already in flight to us. ``bind_host`` /
+    ``advertise_host`` mirror the transport's: the spec the scheduler
+    hands other nodes must be an address THEY can dial, which on a real
+    multi-host fleet is not ``127.0.0.1``."""
 
-    def __init__(self, cache: ChunkCache, wait_s: float = 2.0):
+    def __init__(self, cache: ChunkCache, wait_s: float = 2.0,
+                 bind_host: str = "127.0.0.1",
+                 advertise_host: Optional[str] = None):
         self._cache = cache
         self._wait_s = wait_s
-        self._srv = socket.create_server(("127.0.0.1", 0))
+        self._srv = socket.create_server((bind_host, 0))
         self._srv.settimeout(0.2)
-        self.spec = ("tcp", tuple(self._srv.getsockname()))
+        bound = self._srv.getsockname()
+        if advertise_host is None:
+            advertise_host = (socket.gethostname()
+                              if bind_host in ("0.0.0.0", "::", "")
+                              else bind_host)
+        self.spec = ("tcp", (advertise_host, bound[1]))
         self._closing = False
         self.served_bytes = 0
         threading.Thread(target=self._accept_loop, daemon=True,

@@ -2,16 +2,21 @@
 protocol (``repro.dist.transport``) to its worker.
 
 ONE agent class covers the whole host x transport matrix. The scheduler
-side (this class) is a protocol pump: SUBMIT/STAGE frames go out through
-an async outbox (so ``dispatch`` returns before payloads serialize — the
-transfer overlaps the previous wave's execution), HEARTBEAT frames renew
-the registry lease, RESULT frames resolve ``ShardTask`` futures, LEAVE
-frames deregister. The node side (``_worker_loop``) is the same function
-everywhere: a receiver thread drains the channel — staging STAGE
-payloads through a ``core.staging.Stager`` WHILE the worker thread
-executes the previous shard (overlapped per-node staging, with the
-hidden/visible split measured against the worker's busy clock) — and a
-heartbeat thread beats until the queue drains.
+side (this class) is event-driven: every agent of a fabric registers its
+channel with the transport's shared ``FramePump`` (``repro.dist.pump``)
+— ONE selector thread owning all node connections. SUBMIT/STAGE frames
+go out as pump jobs whose payloads serialize on the pump thread (so
+``dispatch`` returns before payloads serialize — the transfer overlaps
+the previous wave's execution), HEARTBEAT frames renew the registry
+lease, RESULT frames resolve ``ShardTask`` futures (firing their done
+callbacks), LEAVE frames deregister. At 1,000 nodes the scheduler side
+costs 1 thread + O(fds), not 2,000 outbox/receiver threads. The node
+side (``_worker_loop``) is the same function everywhere: a receiver
+thread drains the channel — staging STAGE payloads through a
+``core.staging.Stager`` WHILE the worker thread executes the previous
+shard (overlapped per-node staging, with the hidden/visible split
+measured against the worker's busy clock) — and a heartbeat thread
+beats until the queue drains.
 
 With ``stage_dedup`` on, the STAGE path is content-addressed
 (``repro.dist.chunks``): the send loop pickles the shard payload once,
@@ -34,6 +39,12 @@ relays degrade to direct send, never a hang or a silent corrupt stage.
                    Python process with its own JAX runtime; ``kill()``
                    is a hard SIGTERM, so a lost node is indistinguishable
                    from a crashed host.
+  host="remote"    a worker THIS process did not spawn: the node dialled
+                   the fabric's ``SocketTransport`` itself (``python -m
+                   repro.dist.node --connect host:port``), authenticated
+                   via the HMAC handshake, and self-registered through
+                   the elastic-join path — the agent owns only the
+                   scheduler-side channel.
 
   transport=InprocTransport   queue pairs (by-reference in one process,
                               mp queues across the spawn boundary).
@@ -55,6 +66,7 @@ import itertools
 import os
 import pickle
 import queue
+import socket as _socket
 import threading
 import time
 from typing import Any, Callable, List, Optional
@@ -100,22 +112,47 @@ class ShardTask:
         self.err: Optional[BaseException] = None
         self.wire_bytes = 0           # bytes this shard put on the wire
         self._done = threading.Event()
+        self._cb_lock = threading.Lock()
+        self._callbacks: List[Callable] = []
 
     @property
     def ready(self) -> bool:
         return self._done.is_set()
+
+    def add_done_callback(self, cb: Callable[["ShardTask"], None]) -> None:
+        """Run ``cb(task)`` when the shard resolves (result OR error) —
+        the pump's completion push: wave handles subscribe here instead
+        of polling every in-flight future. Fires immediately if already
+        resolved; callbacks run on whatever thread resolves the task
+        (usually the pump thread), so keep them O(1)."""
+        with self._cb_lock:
+            if not self._done.is_set():
+                self._callbacks.append(cb)
+                return
+        cb(self)
+
+    def _fire_callbacks(self) -> None:
+        with self._cb_lock:
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            try:
+                cb(self)
+            except Exception:  # noqa: BLE001 — a late watcher, never fatal
+                pass
 
     def set_result(self, out: Any, rec: Any) -> None:
         if self._done.is_set():
             return
         self.out, self.rec = out, rec
         self._done.set()
+        self._fire_callbacks()
 
     def set_error(self, err: BaseException) -> None:
         if self._done.is_set():
             return
         self.err = err
         self._done.set()
+        self._fire_callbacks()
 
     def cancel(self) -> None:
         """Best-effort: a shard not yet on the wire is never sent; an
@@ -466,7 +503,9 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
                  numpy_out: bool = False,
                  stage_dedup: bool = False,
                  chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES,
-                 peer_mode: Optional[str] = None) -> None:
+                 peer_mode: Optional[str] = None,
+                 peer_bind_host: str = "127.0.0.1",
+                 peer_advertise_host: Optional[str] = None) -> None:
     """The node side, identical for every host x transport combination:
     heartbeat thread (beats BEFORE the heavy imports — booting is not
     being dead), receiver thread (stages STAGE payloads overlapped with
@@ -502,7 +541,9 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
         ctl.chunk_cache = chunk_cache
         if peer_mode == "tcp":
             try:
-                peer_server = PeerChunkServer(chunk_cache)
+                peer_server = PeerChunkServer(
+                    chunk_cache, bind_host=peer_bind_host,
+                    advertise_host=peer_advertise_host)
                 peer_spec = peer_server.spec
             except OSError:
                 peer_spec = None       # can't serve peers; still dedups
@@ -619,18 +660,24 @@ def _process_main(node_id: str, endpoint: tuple, heartbeat_s: float,
     # peers can only reach a process-hosted node over TCP; an inproc
     # cache token would not resolve across the spawn boundary
     peer_mode = "tcp" if endpoint[0] == "socket" else None
+    spec = endpoint[1] if isinstance(endpoint[1], dict) else {}
     _worker_loop(node_id, channel, _WorkerCtl(), heartbeat_s,
                  backend_kind=backend_kind, cache_dir=cache_dir,
                  numpy_out=True, stage_dedup=stage_dedup,
-                 chunk_cache_bytes=chunk_cache_bytes, peer_mode=peer_mode)
+                 chunk_cache_bytes=chunk_cache_bytes, peer_mode=peer_mode,
+                 peer_bind_host=spec.get("peer_bind_host", "127.0.0.1"),
+                 peer_advertise_host=spec.get("peer_advertise_host"))
 
 
 class NodeAgent:
     """Scheduler-side handle of one node: owns the channel, the pending
     shard futures, and the node's lifecycle. ``host`` picks where the
-    worker runs ("thread" | "process"); ``transport`` how frames travel
-    (an ``InprocTransport``/``SocketTransport`` instance — every agent of
-    a fabric may share one transport; each gets its own channel)."""
+    worker runs ("thread" | "process" | "remote" — a self-registered
+    worker whose ``channel`` arrives via the transport's unclaimed-node
+    callback); ``transport`` how frames travel (an ``InprocTransport``/
+    ``SocketTransport`` instance — every agent of a fabric may share one
+    transport; each gets its own channel, all channels share the
+    transport's single ``FramePump`` thread)."""
 
     def __init__(self, node_id: str, registry: NodeRegistry,
                  capacity: int = 1,
@@ -647,10 +694,15 @@ class NodeAgent:
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES,
                  directory: Optional[ChunkDirectory] = None,
+                 channel: Optional[Any] = None,
                  start: bool = True):
-        if host not in ("thread", "process"):
+        if host not in ("thread", "process", "remote"):
             raise ValueError(f"unknown node host {host!r}; "
-                             f"choose 'thread' or 'process'")
+                             f"choose 'thread', 'process' or 'remote'")
+        if host == "remote" and channel is None:
+            raise ValueError("host='remote' needs the worker's channel "
+                             "(the transport's unclaimed-node callback "
+                             "provides it)")
         self.node_id = node_id
         self.registry = registry
         self.capacity = capacity
@@ -673,16 +725,22 @@ class NodeAgent:
         self.devices = devices
         self._killed = False
         self._stopping = False
+        self._booted = host != "process"
         self._pending: dict = {}
+        # task ids whose STAGE was skipped at send time (resolved or
+        # cancelled first): their paired SUBMIT must be skipped too.
+        # Pump-thread-only state — prepare closures run serialized there.
+        self._skipped: set = set()
         self._lock = threading.Lock()
-        self._outbox: "queue.Queue" = queue.Queue()
         self._threads: List[threading.Thread] = []
-        self._ch = None
+        self._ch = channel
         self._proc = None
+        self._port = None
+        self.pump = None
         self._ctl: Optional[_WorkerCtl] = None
-        # everything crossing a socket (or a process boundary) must be
-        # serialized; thread+inproc passes by reference
-        self._numpy_out = (host == "process"
+        # everything crossing a socket (or a process/host boundary) must
+        # be serialized; thread+inproc passes by reference
+        self._numpy_out = (host in ("process", "remote")
                            or getattr(self.transport, "name", "") == "socket")
         if host == "thread":
             # local imports: a NodeAgent is constructible before jax
@@ -701,7 +759,7 @@ class NodeAgent:
             self.backend = backend
             self._ctl = _WorkerCtl()
             self._port = self.transport.create(node_id)
-        else:
+        elif host == "process":
             import multiprocessing as mp
             ctx = mp.get_context("spawn")
             self._port = self.transport.create(
@@ -727,6 +785,8 @@ class NodeAgent:
             endpoint = self._port.endpoint
             peer_mode = ("tcp" if getattr(self.transport, "name", "")
                          == "socket" else "inproc")
+            peer_bind = getattr(self.transport, "bind_host", "127.0.0.1")
+            peer_adv = getattr(self.transport, "advertise_host", None)
 
             def thread_main():
                 channel = open_worker_channel(endpoint)
@@ -735,21 +795,28 @@ class NodeAgent:
                              numpy_out=self._numpy_out,
                              stage_dedup=self.stage_dedup,
                              chunk_cache_bytes=self.chunk_cache_bytes,
-                             peer_mode=peer_mode)
+                             peer_mode=peer_mode,
+                             peer_bind_host=peer_bind,
+                             peer_advertise_host=peer_adv)
 
             t = threading.Thread(target=thread_main, daemon=True,
                                  name=f"node-{self.node_id}-worker")
             t.start()
             self._threads.append(t)
-        else:
+        elif self.host == "process":
             self._proc.start()
-        # blocks, for sockets, until the worker has dialled in
-        self._ch = self._port.driver_channel()
-        for target in (self._pump, self._send_loop):
-            t = threading.Thread(target=target, daemon=True,
-                                 name=f"node-{self.node_id}-{target.__name__}")
-            t.start()
-            self._threads.append(t)
+        if self._ch is None:
+            # blocks, for sockets, until the worker has dialled in
+            self._ch = self._port.driver_channel()
+        # hand the connection to the transport's shared selector pump:
+        # from here on every frame this node sends arrives via _on_frame
+        # and its death (EOF) via _on_eof — no per-node threads
+        self.pump = self.transport.pump
+        self.pump.register(
+            self.node_id, self._ch,
+            on_frame=self._on_frame, on_eof=self._on_eof,
+            tick=self._boot_tick if self.host == "process" else None,
+            tick_interval=self.heartbeat_s)
         if self.stage_dedup:
             # the node's PEER frame is its first post-handshake message;
             # waiting for it lets the very first wave fan out peer-to-
@@ -763,10 +830,10 @@ class NodeAgent:
         registry's job (lease expiry — or, over sockets, the dropped
         connection), not ours: dead nodes don't announce themselves."""
         self._killed = True
-        if self.host == "process":
+        if self._proc is not None:
             if self._proc.is_alive():
                 self._proc.terminate()
-        else:
+        elif self._ctl is not None:
             self._ctl.killed.set()
         if self.directory is not None:
             with self._lock:
@@ -774,29 +841,35 @@ class NodeAgent:
             for task_id in pending:
                 self._unpin(task_id)
             self.directory.drop_node(self.node_id)
-        # the host is gone, and its connection goes with it (over TCP the
-        # FIN is physical reality, not an announcement)
+        # the pump forgets the node first (a deliberate kill is not an
+        # EOF event), then the host's connection goes with it (over TCP
+        # the FIN is physical reality, not an announcement)
+        if self.pump is not None:
+            self.pump.unregister(self.node_id)
         if self._ch is not None:
             self._ch.close()
-        self._outbox.put(None)
 
     def stop(self, timeout: float = 10.0) -> None:
         """Graceful leave: drain the queue, send LEAVE, deregister."""
         self._stopping = True
-        self._outbox.put((LEAVE, self.node_id, None))
+        if self.pump is not None:
+            self.pump.send(self.node_id, LEAVE, self.node_id)
         deadline = time.monotonic() + timeout
-        if self.host == "process":
+        if self._proc is not None:
             self._proc.join(timeout)
-        while (time.monotonic() < deadline
-               and self.registry.nodes.get(self.node_id) is not None
-               and self.registry.nodes[self.node_id].state != LEFT):
+
+        def _left() -> bool:
+            info = self.registry.info(self.node_id)
+            return info is None or info.state == LEFT
+
+        while time.monotonic() < deadline and not _left():
             time.sleep(self.heartbeat_s / 2)
         # belt and braces: a leave must never read as a failure, even if
         # the LEAVE frame raced a teardown
-        if (self.node_id in self.registry.nodes
-                and self.registry.nodes[self.node_id].state != LEFT):
+        if not _left():
             self.registry.deregister(self.node_id)
-        self._outbox.put(None)
+        if self.pump is not None:
+            self.pump.unregister(self.node_id)
         if self._ch is not None:
             self._ch.close()
         for t in self._threads:
@@ -827,17 +900,17 @@ class NodeAgent:
             ok = ok and self._proc.is_alive()
         return ok
 
-    # -- scheduler-side protocol pumps --------------------------------------
+    # -- scheduler-side protocol (runs on the transport's pump thread) ------
     def submit(self, fn: Callable, chunk: Any, n: int,
                inner_lanes: Optional[int] = None,
                row_offset: int = 0) -> ShardTask:
         """Enqueue one shard. Returns immediately: the payload travels
-        through the async outbox (a STAGE frame ahead of a tiny SUBMIT
-        when staging overlap is on), so serialization and transfer happen
-        while earlier waves execute. ``row_offset`` is the shard's global
-        position in its wave — content-addressed staging aligns its chunk
-        boundaries to it, so the same rows yield the same digests however
-        the wave was split."""
+        as pump jobs (a STAGE frame ahead of a tiny SUBMIT when staging
+        overlap is on) whose serialization happens on the pump thread,
+        so transfer overlaps earlier waves' execution. ``row_offset`` is
+        the shard's global position in its wave — content-addressed
+        staging aligns its chunk boundaries to it, so the same rows
+        yield the same digests however the wave was split."""
         task = ShardTask(fn, chunk, n, inner_lanes)
         task._on_cancel = self._cancel_hook
         with self._lock:
@@ -849,15 +922,54 @@ class NodeAgent:
             chunk = jax.tree_util.tree_map(np.asarray, chunk)
         sub = {"task_id": task.task_id, "fn": fn, "n": n,
                "inner_lanes": inner_lanes}
+        on_error = lambda e, t=task: self._send_error(t, e)  # noqa: E731
         if self.overlap_staging:
-            self._outbox.put((STAGE, {"task_id": task.task_id,
-                                      "chunk": chunk,
-                                      "off": row_offset}, task))
+            payload = {"task_id": task.task_id, "chunk": chunk,
+                       "off": row_offset}
             sub["staged"] = True
+            self.pump.submit_job(
+                self.node_id,
+                lambda: self._prepare_stage(payload, task),
+                task=task, on_error=on_error)
         else:
             sub["chunk"] = chunk
-        self._outbox.put((SUBMIT, sub, task))
+        self.pump.submit_job(
+            self.node_id,
+            lambda: self._prepare_submit(sub, task),
+            task=task, on_error=on_error)
         return task
+
+    def _prepare_stage(self, payload: dict, task: ShardTask):
+        """Pump-side send decision for a STAGE job: a poisoned pair
+        (payload already errored) or a shard cancelled BEFORE its bytes
+        hit the wire is skipped whole — its paired SUBMIT follows suit
+        via ``_skipped``. Once the STAGE is out, its SUBMIT must follow
+        so the node's stager entry is consumed."""
+        if self._killed:
+            return None
+        if task.ready or task.cancelled:
+            self._skipped.add(task.task_id)
+            return None
+        if self.stage_dedup:
+            return self._prepare_stage_dedup(payload, task)
+        return ((STAGE, payload),)
+
+    def _prepare_submit(self, sub: dict, task: ShardTask):
+        if self._killed or task.ready:
+            return None
+        if task.task_id in self._skipped:
+            self._skipped.discard(task.task_id)
+            return None
+        if task.cancelled and not sub.get("staged"):
+            return None
+        return ((SUBMIT, sub),)
+
+    def _send_error(self, task: ShardTask, err: BaseException) -> None:
+        """A per-task send failure (oversized/unpicklable payload):
+        encode failed BEFORE any bytes hit the stream, so the channel is
+        intact — fail just this shard, keep the connection."""
+        task.set_error(err)
+        self._unpin(task.task_id)
 
     def _cancel_hook(self, task_id) -> None:
         if self._ctl is not None:
@@ -897,14 +1009,14 @@ class NodeAgent:
         blob = pickle.dumps(chunk, protocol=pickle.HIGHEST_PROTOCOL)
         return "blob", chunk_split(blob, eff)
 
-    def _send_stage_dedup(self, payload: dict, task: ShardTask) -> int:
+    def _prepare_stage_dedup(self, payload: dict, task: ShardTask):
         """Content-addressed STAGE: serialize the shard payload into
-        digest-keyed chunks and send per the directory's plan — nothing
+        digest-keyed chunks and emit per the directory's plan — nothing
         for chunks the node holds, a peer hint for chunks a healthy
-        holder can serve, bytes otherwise. Returns bytes put on the
-        wire. An over-cap payload raises ``PayloadTooLarge`` before ANY
-        frame goes out (the cap bounds the shard, not just a frame —
-        chunking must not smuggle oversized waves past it)."""
+        holder can serve, bytes otherwise. Returns the frames to send.
+        An over-cap payload raises ``PayloadTooLarge`` before ANY frame
+        goes out (the cap bounds the shard, not just a frame — chunking
+        must not smuggle oversized waves past it)."""
         task_id = payload["task_id"]
         cap = self._ch.max_frame_bytes
         # keep every CHUNK frame (body + framing overhead) under the cap
@@ -933,56 +1045,10 @@ class NodeAgent:
         # pinned until the shard resolves: a CHUNK_REQ for an evicted or
         # relay-failed chunk must always be answerable from the store
         self.directory.pin_task((self.node_id, task_id), seen)
-        wire = self._ch.send(STAGE, {"task_id": task_id,
-                                     "chunks": manifest, "mode": mode})
-        for d, data in to_wire:
-            wire += self._ch.send(CHUNK, {"d": d, "data": data})
-        return wire
-
-    def _send_loop(self) -> None:
-        skipped: set = set()
-        while True:
-            item = self._outbox.get()
-            if item is None:
-                return
-            kind, payload, task = item
-            if self._killed:
-                continue
-            if task is not None:
-                # a poisoned pair (oversized/unpicklable STAGE -> task
-                # already errored) or a shard cancelled BEFORE its
-                # payload hit the wire is skipped whole; once the STAGE
-                # is out, its SUBMIT must follow so the node's stager
-                # entry is consumed (worker-side cancellation discards it)
-                if kind == STAGE and (task.ready or task.cancelled):
-                    skipped.add(task.task_id)
-                    continue
-                if kind == SUBMIT and (
-                        task.ready or task.task_id in skipped
-                        or (task.cancelled and not payload.get("staged"))):
-                    continue
-            try:
-                if kind == STAGE and self.stage_dedup:
-                    task.wire_bytes += self._send_stage_dedup(payload, task)
-                else:
-                    sent = self._ch.send(kind, payload)
-                    if task is not None:
-                        task.wire_bytes += sent
-            except PayloadTooLarge as e:
-                # rejected before the wire: fail the shard loudly — the
-                # paired frame is skipped via task.ready above
-                if task is not None:
-                    task.set_error(e)
-                    self._unpin(task.task_id)
-            except TransportError:
-                return                # peer gone; the pump condemns it
-            except Exception as e:  # noqa: BLE001 — payload-specific
-                # e.g. an unpicklable shard fn over the socket wire:
-                # encode failed BEFORE any bytes hit the stream, so the
-                # channel is intact — fail just this shard, keep sending
-                if task is not None:
-                    task.set_error(e)
-                    self._unpin(task.task_id)
+        frames = [(STAGE, {"task_id": task_id,
+                           "chunks": manifest, "mode": mode})]
+        frames.extend((CHUNK, {"d": d, "data": data}) for d, data in to_wire)
+        return frames
 
     def _on_result(self, payload: dict) -> None:
         with self._lock:
@@ -1018,53 +1084,52 @@ class NodeAgent:
             data = self.directory.store_get(d)
             if data is not None:
                 self.directory.record(self.node_id, d, len(data))
-            self._outbox.put((CHUNK, {"d": d, "data": data}, task))
+            self.pump.submit_job(
+                self.node_id,
+                lambda p={"d": d, "data": data}: ((CHUNK, p),),
+                task=task,
+                on_error=(None if task is None else
+                          (lambda e, t=task: self._send_error(t, e))))
 
-    def _pump(self) -> None:
-        """Scheduler-side frame router: heartbeats renew the lease,
-        results resolve futures, LEAVE deregisters, and EOF without a
-        LEAVE is condemned as node death (dead connection ≡ lease
-        expiry)."""
-        booted = self.host == "thread"
-        while not self._killed:
-            try:
-                frame = self._ch.recv(timeout=self.heartbeat_s)
-            except TransportError:
-                if not self._killed and not self._stopping:
-                    self.registry.expire(self.node_id)
-                if self.directory is not None:
-                    self.directory.drop_node(self.node_id)
-                return
-            if frame is None:
-                if self._stopping and not self._pending:
-                    return
-                # boot grace: the spawn bootstrap (python + jax import in
-                # the child) outlives short leases — the parent vouches
-                # for a LIVE process it can see until the child's own
-                # beats start flowing
-                if (not booted and not self._killed
-                        and self._proc is not None
-                        and self._proc.is_alive()):
-                    self.registry.heartbeat(self.node_id)
-                continue
-            if frame.kind == HEARTBEAT:
-                booted = True
-                if not self._killed:
-                    self.registry.heartbeat(self.node_id)
-            elif frame.kind == RESULT:
-                self._on_result(frame.payload)
-            elif frame.kind == CHUNK_REQ:
-                self._on_chunk_req(frame.payload)
-            elif frame.kind == PEER:
-                if self.directory is not None:
-                    self.directory.set_peer(self.node_id,
-                                            frame.payload.get("peer"))
-                self._peer_ready.set()
-            elif frame.kind == LEAVE:
-                if self.directory is not None:
-                    self.directory.drop_node(self.node_id)
-                self.registry.deregister(self.node_id)
-                return
+    def _on_frame(self, frame) -> None:
+        """Scheduler-side frame router (pump thread): heartbeats renew
+        the lease, results resolve futures, LEAVE deregisters."""
+        if frame.kind == HEARTBEAT:
+            self._booted = True
+            if not self._killed:
+                self.registry.heartbeat(self.node_id)
+        elif frame.kind == RESULT:
+            self._on_result(frame.payload)
+        elif frame.kind == CHUNK_REQ:
+            self._on_chunk_req(frame.payload)
+        elif frame.kind == PEER:
+            if self.directory is not None:
+                self.directory.set_peer(self.node_id,
+                                        frame.payload.get("peer"))
+            self._peer_ready.set()
+        elif frame.kind == LEAVE:
+            if self.directory is not None:
+                self.directory.drop_node(self.node_id)
+            self.registry.deregister(self.node_id)
+            self.pump.unregister(self.node_id)
+
+    def _on_eof(self, err) -> None:
+        """Connection death without a LEAVE: condemned as node death
+        (dead connection ≡ lease expiry), unless WE initiated the
+        teardown (kill/stop close the channel deliberately)."""
+        if not self._killed and not self._stopping:
+            self.registry.expire(self.node_id)
+        if self.directory is not None:
+            self.directory.drop_node(self.node_id)
+
+    def _boot_tick(self) -> None:
+        """Boot grace (process hosts, pump tick): the spawn bootstrap
+        (python + jax import in the child) outlives short leases — the
+        parent vouches for a LIVE process it can see until the child's
+        own beats start flowing."""
+        if (not self._booted and not self._killed
+                and self._proc is not None and self._proc.is_alive()):
+            self.registry.heartbeat(self.node_id)
 
 
 class ProcessNodeAgent(NodeAgent):
@@ -1114,3 +1179,67 @@ def spawn_local_nodes(n_nodes: int, registry: NodeRegistry,
                                 capacity=caps[i], devices=subset,
                                 transport=transport, **agent_kwargs))
     return agents
+
+
+def _connect_main(argv: Optional[List[str]] = None) -> None:
+    """``python -m repro.dist.node --connect HOST:PORT [--secret-file F]``
+
+    Bootstrap of a REMOTE node: dial the fabric's ``SocketTransport``,
+    answer its HMAC challenge (when the fleet is secret-armed), and
+    self-register through the elastic-join path — the scheduler's
+    unclaimed-connection callback builds the matching agent, and from
+    then on this process is a node like any other (shards in, results
+    out, LEAVE on drain). Blocks until the scheduler sends LEAVE or the
+    connection drops."""
+    import argparse
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.dist.node",
+        description="join a running launch fabric as a worker node")
+    parser.add_argument("--connect", required=True, metavar="HOST:PORT",
+                        help="the scheduler transport's advertise address")
+    parser.add_argument("--node-id", default=None,
+                        help="node id (default: remote-<host>-<pid>)")
+    parser.add_argument("--capacity", type=int, default=1,
+                        help="capacity weight in the wave shard split")
+    parser.add_argument("--secret-file", default=None,
+                        help="file holding the fleet's shared secret "
+                             "(required when the scheduler is armed)")
+    parser.add_argument("--backend", default="array",
+                        help="node-local launch backend kind")
+    parser.add_argument("--heartbeat-s", type=float, default=0.25)
+    parser.add_argument("--cache-dir", default=None,
+                        help="node-local AOT compile cache directory")
+    parser.add_argument("--chunk-cache-bytes", type=int,
+                        default=DEFAULT_CHUNK_CACHE_BYTES)
+    parser.add_argument("--peer-bind-host", default="0.0.0.0",
+                        help="bind host for the node's peer chunk server")
+    parser.add_argument("--peer-advertise-host", default=None,
+                        help="address peers should dial for chunks "
+                             "(default: this host's name)")
+    args = parser.parse_args(argv)
+    host, _, port = args.connect.rpartition(":")
+    if not host or not port.isdigit():
+        parser.error(f"--connect wants HOST:PORT, got {args.connect!r}")
+    node_id = args.node_id or f"remote-{_socket.gethostname()}-{os.getpid()}"
+    secret = None
+    if args.secret_file:
+        with open(args.secret_file, "rb") as f:
+            secret = f.read().strip()
+    from repro.dist.transport import SocketTransport
+    channel = SocketTransport.connect((host, int(port)), node_id,
+                                      secret=secret,
+                                      capacity=args.capacity)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+    _worker_loop(node_id, channel, _WorkerCtl(), args.heartbeat_s,
+                 backend_kind=args.backend, cache_dir=args.cache_dir,
+                 numpy_out=True, stage_dedup=True,
+                 chunk_cache_bytes=args.chunk_cache_bytes,
+                 peer_mode="tcp",
+                 peer_bind_host=args.peer_bind_host,
+                 peer_advertise_host=(args.peer_advertise_host
+                                      or _socket.gethostname()))
+
+
+if __name__ == "__main__":
+    _connect_main()

@@ -12,9 +12,9 @@ is that knowledge for the distributed backend:
     SAME ``HeartbeatDetector`` that drives ``resilient_train`` restarts
     (``repro.runtime.fault``) — one liveness clock for the whole repo.
     Heartbeats ARRIVE AS FRAMES now (``repro.dist.transport``): the
-    agent's scheduler-side pump routes HEARTBEAT frames here, and a
-    dropped connection is condemned immediately via ``expire`` — lease
-    expiry and a dead connection are one signal;
+    scheduler's frame pump routes HEARTBEAT frames here, and a dropped
+    connection is condemned immediately via ``expire`` — lease expiry
+    and a dead connection are one signal;
   * ``observe_shard`` feeds each completed shard's measured wall clock
     into a per-node cost-per-instance EWMA (``repro.core.autoscale.Ewma``
     — the same smoothing the wave controller runs). The backend turns it
@@ -28,6 +28,15 @@ is that knowledge for the distributed backend:
     (its lease is gone — late beats from a zombie are ignored);
   * ``deregister`` is the graceful leave: the node drains and stops
     receiving waves without ever counting as a failure.
+
+Scaling shape (the fleet refactor): the node table is SHARDED — each
+shard owns a slice of the ids under its own lock with its own
+``HeartbeatDetector``, so heartbeat/lease/observe_shard updates for
+different nodes never contend on one global lock. Membership-changing
+transitions bump a version counter, and the read-side snapshots
+(``alive``/``usable``/``states``) are served from version-keyed caches:
+at steady state (thousands of beats/s, zero membership churn) a dispatch
+poll is a dict read, not an O(nodes) scan under a global lock.
 
 The registry is pure bookkeeping — it never touches work queues. Who gets
 which shard is the ``DistributedBackend``'s job; what happens to a dead
@@ -48,6 +57,10 @@ SUSPECT = "suspect"
 DEAD = "dead"
 LEFT = "left"
 
+#: default lock-shard count — plenty for hundreds of pump/worker threads
+#: hammering leases, tiny enough that full scans stay cheap
+DEFAULT_SHARDS = 8
+
 
 @dataclass
 class NodeInfo:
@@ -63,28 +76,55 @@ class NodeInfo:
     extra: dict = field(default_factory=dict)
 
 
+class _Shard:
+    """One lock-shard of the node table: its slice of the ids, their
+    lease detector, and the lock both live under."""
+
+    __slots__ = ("lock", "nodes", "detector")
+
+    def __init__(self, heartbeat_timeout_s: float, clock):
+        self.lock = threading.RLock()
+        self.nodes: Dict[str, NodeInfo] = {}
+        self.detector = HeartbeatDetector(timeout_s=heartbeat_timeout_s,
+                                          clock=clock)
+
+
 class NodeRegistry:
     """Register/heartbeat/lease-expiry with alive/suspect/dead health."""
 
     def __init__(self, heartbeat_timeout_s: float = 0.5,
                  suspect_frac: float = 0.5,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 shards: int = DEFAULT_SHARDS):
         if not 0.0 < suspect_frac <= 1.0:
             raise ValueError(f"suspect_frac must be in (0, 1], "
                              f"got {suspect_frac}")
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.suspect_after_s = suspect_frac * heartbeat_timeout_s
         self.clock = clock
-        self.detector = HeartbeatDetector(timeout_s=heartbeat_timeout_s,
-                                          clock=clock)
-        self.nodes: Dict[str, NodeInfo] = {}
-        self._lock = threading.RLock()
+        self._shards = tuple(_Shard(heartbeat_timeout_s, clock)
+                             for _ in range(max(1, int(shards))))
+        # membership/health version: bumped on any transition that can
+        # change what alive()/usable()/states() return; snapshot caches
+        # below are keyed by it so steady-state reads are lock-free
+        self._version = 0
+        self._vlock = threading.Lock()
+        self._alive_cache = (-1, [])
+        self._usable_cache = (-1, [])
+        self._states_cache = (-1, {})
         # rate limit: pollers call sweep() thousands of times a second,
         # but health can only change at heartbeat granularity — a sweep
         # within 1/20 of the lease of the previous one is a no-op (the
         # added detection latency is negligible against the lease itself)
         self._sweep_interval_s = heartbeat_timeout_s / 20.0
         self._last_sweep = float("-inf")
+
+    def _shard(self, node_id: str) -> _Shard:
+        return self._shards[hash(node_id) % len(self._shards)]
+
+    def _bump(self) -> None:
+        with self._vlock:
+            self._version += 1
 
     # -- membership --------------------------------------------------------
     def register(self, node_id: str, capacity: int = 1) -> NodeInfo:
@@ -93,104 +133,155 @@ class NodeRegistry:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         now = self.clock()
-        with self._lock:
-            info = self.nodes.get(node_id)
+        sh = self._shard(node_id)
+        with sh.lock:
+            info = sh.nodes.get(node_id)
             if info is None:
                 info = NodeInfo(node_id, capacity, registered_at=now)
-                self.nodes[node_id] = info
+                sh.nodes[node_id] = info
             info.capacity = capacity
             info.state = ALIVE
-            self.detector.beat(node_id, now=now)
-            return info
+            sh.detector.beat(node_id, now=now)
+        self._bump()
+        return info
 
     def deregister(self, node_id: str) -> None:
         """Graceful leave: the node stops receiving waves; not a failure."""
-        with self._lock:
-            info = self.nodes.get(node_id)
+        sh = self._shard(node_id)
+        with sh.lock:
+            info = sh.nodes.get(node_id)
             if info is not None:
                 info.state = LEFT
-            self.detector.forget(node_id)
+            sh.detector.forget(node_id)
+        self._bump()
 
     def heartbeat(self, node_id: str) -> bool:
         """Renew the lease. Returns False (beat ignored) for unknown,
         left, or already-condemned nodes — a zombie whose lease expired
         must ``register`` again, it cannot quietly resurrect while the
         fabric is re-dispatching its work."""
-        with self._lock:
-            info = self.nodes.get(node_id)
+        sh = self._shard(node_id)
+        recovered = False
+        with sh.lock:
+            info = sh.nodes.get(node_id)
             if info is None or info.state in (DEAD, LEFT):
                 return False
-            self.detector.beat(node_id)
+            sh.detector.beat(node_id)
             if info.state == SUSPECT:
                 info.state = ALIVE
-            return True
+                recovered = True
+        if recovered:
+            self._bump()
+        return True
 
     def expire(self, node_id: str) -> None:
         """Condemn a node NOW: its transport connection dropped, which is
         the same fact a lease expiry asserts (nobody will deliver its
         results) learned faster. A LEFT node stays left — a graceful
         leave's connection close is not a failure."""
-        with self._lock:
-            info = self.nodes.get(node_id)
+        sh = self._shard(node_id)
+        with sh.lock:
+            info = sh.nodes.get(node_id)
             if info is None or info.state in (DEAD, LEFT):
                 return
             info.state = DEAD
             info.failures += 1
-            self.detector.forget(node_id)
+            sh.detector.forget(node_id)
+        self._bump()
+
+    # -- lookups -----------------------------------------------------------
+    @property
+    def nodes(self) -> Dict[str, NodeInfo]:
+        """Merged snapshot of the whole node table (the pre-shard dict
+        shape, kept for callers and tests; the ``NodeInfo`` objects are
+        the live ones). Hot paths use ``info()`` — O(1), one shard lock."""
+        out: Dict[str, NodeInfo] = {}
+        for sh in self._shards:
+            with sh.lock:
+                out.update(sh.nodes)
+        return out
+
+    def info(self, node_id: str) -> Optional[NodeInfo]:
+        """One node's live ``NodeInfo`` (or None) — O(1), one shard lock."""
+        sh = self._shard(node_id)
+        with sh.lock:
+            return sh.nodes.get(node_id)
 
     # -- health ------------------------------------------------------------
     def sweep(self, now: Optional[float] = None) -> Dict[str, str]:
         """Advance health states from heartbeat ages; returns the
         transitions applied ({node_id: new_state}). Rate-limited: calls
         within ``_sweep_interval_s`` of the previous sweep return {}
-        without touching the lock-held node table."""
+        without touching the node table."""
         now = self.clock() if now is None else now
         if now - self._last_sweep < self._sweep_interval_s:
             return {}
+        self._last_sweep = now
         moved: Dict[str, str] = {}
-        with self._lock:
-            self._last_sweep = now
-            for info in self.nodes.values():
-                if info.state in (DEAD, LEFT):
-                    continue
-                age = self.detector.age(info.node_id, now=now)
-                if age > self.heartbeat_timeout_s:
-                    info.state = DEAD
-                    info.failures += 1
-                    self.detector.forget(info.node_id)
-                    moved[info.node_id] = DEAD
-                elif age > self.suspect_after_s:
-                    if info.state != SUSPECT:
-                        moved[info.node_id] = SUSPECT
-                    info.state = SUSPECT
-                elif info.state != ALIVE:
-                    info.state = ALIVE
-                    moved[info.node_id] = ALIVE
+        for sh in self._shards:
+            with sh.lock:
+                for info in sh.nodes.values():
+                    if info.state in (DEAD, LEFT):
+                        continue
+                    age = sh.detector.age(info.node_id, now=now)
+                    if age > self.heartbeat_timeout_s:
+                        info.state = DEAD
+                        info.failures += 1
+                        sh.detector.forget(info.node_id)
+                        moved[info.node_id] = DEAD
+                    elif age > self.suspect_after_s:
+                        if info.state != SUSPECT:
+                            moved[info.node_id] = SUSPECT
+                        info.state = SUSPECT
+                    elif info.state != ALIVE:
+                        info.state = ALIVE
+                        moved[info.node_id] = ALIVE
+        if moved:
+            self._bump()
         return moved
 
     def state(self, node_id: str) -> str:
         """Current health of a node; unknown ids read as dead."""
         self.sweep()
-        with self._lock:
-            info = self.nodes.get(node_id)
-            return DEAD if info is None else info.state
+        info = self.info(node_id)
+        return DEAD if info is None else info.state
 
     def states(self) -> Dict[str, str]:
         """One sweep, one snapshot of every node's health — the cheap
-        form for callers checking many nodes per poll tick."""
+        form for callers checking many nodes per poll tick. Served from
+        the version cache when membership/health has not moved."""
         self.sweep()
-        with self._lock:
-            return {nid: i.state for nid, i in self.nodes.items()}
+        version, cached = self._states_cache
+        if version == self._version:
+            return cached
+        # read the version BEFORE building: a transition landing mid-build
+        # leaves the cache stamped stale, never wrong
+        version = self._version
+        snap: Dict[str, str] = {}
+        for sh in self._shards:
+            with sh.lock:
+                for nid, i in sh.nodes.items():
+                    snap[nid] = i.state
+        self._states_cache = (version, snap)
+        return snap
 
     def is_dead(self, node_id: str) -> bool:
         return self.state(node_id) == DEAD
 
     def alive(self, now: Optional[float] = None) -> List[NodeInfo]:
         """Nodes eligible for NEW waves (strictly alive — suspects keep
-        their in-flight work but receive nothing new until they beat)."""
+        their in-flight work but receive nothing new until they beat).
+        Steady-state calls are a cache read — callers must not mutate
+        the returned list."""
         self.sweep(now)
-        with self._lock:
-            return [i for i in self.nodes.values() if i.state == ALIVE]
+        version, cached = self._alive_cache
+        if version == self._version:
+            return cached
+        version = self._version
+        snap = [i for sh in self._shards
+                for i in self._locked_values(sh) if i.state == ALIVE]
+        self._alive_cache = (version, snap)
+        return snap
 
     def usable(self, now: Optional[float] = None) -> List[NodeInfo]:
         """Alive AND suspect nodes: the dispatch fallback pool. A suspect
@@ -199,14 +290,26 @@ class NodeRegistry:
         the fabric places waves on suspects rather than failing a launch
         that could still complete."""
         self.sweep(now)
-        with self._lock:
-            return [i for i in self.nodes.values()
-                    if i.state in (ALIVE, SUSPECT)]
+        version, cached = self._usable_cache
+        if version == self._version:
+            return cached
+        version = self._version
+        snap = [i for sh in self._shards
+                for i in self._locked_values(sh)
+                if i.state in (ALIVE, SUSPECT)]
+        self._usable_cache = (version, snap)
+        return snap
+
+    @staticmethod
+    def _locked_values(sh: _Shard) -> List[NodeInfo]:
+        with sh.lock:
+            return list(sh.nodes.values())
 
     # -- accounting ---------------------------------------------------------
     def record_dispatch(self, node_id: str, n_instances: int) -> None:
-        with self._lock:
-            info = self.nodes.get(node_id)
+        sh = self._shard(node_id)
+        with sh.lock:
+            info = sh.nodes.get(node_id)
             if info is not None:
                 info.waves += 1
                 info.instances += n_instances
@@ -216,8 +319,9 @@ class NodeRegistry:
         cost-per-instance EWMA — the capacity re-weighting signal."""
         if n <= 0 or wall_s <= 0:
             return
-        with self._lock:
-            info = self.nodes.get(node_id)
+        sh = self._shard(node_id)
+        with sh.lock:
+            info = sh.nodes.get(node_id)
             if info is None:
                 return
             if info.cost is None:
@@ -225,8 +329,9 @@ class NodeRegistry:
             info.cost.update(wall_s / n)
 
     def cost_per_instance(self, node_id: str) -> Optional[float]:
-        with self._lock:
-            info = self.nodes.get(node_id)
+        sh = self._shard(node_id)
+        with sh.lock:
+            info = sh.nodes.get(node_id)
             return (info.cost.value
                     if info is not None and info.cost is not None else None)
 
@@ -234,10 +339,14 @@ class NodeRegistry:
         """Per-node summary (state, capacity, dispatched work, failures,
         measured cost)."""
         self.sweep()
-        with self._lock:
-            return {i.node_id: {"state": i.state, "capacity": i.capacity,
-                                "waves": i.waves, "instances": i.instances,
-                                "failures": i.failures,
-                                "cost_per_instance":
-                                    i.cost.value if i.cost else None}
-                    for i in self.nodes.values()}
+        out: Dict[str, dict] = {}
+        for sh in self._shards:
+            with sh.lock:
+                for i in sh.nodes.values():
+                    out[i.node_id] = {
+                        "state": i.state, "capacity": i.capacity,
+                        "waves": i.waves, "instances": i.instances,
+                        "failures": i.failures,
+                        "cost_per_instance":
+                            i.cost.value if i.cost else None}
+        return out

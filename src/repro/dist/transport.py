@@ -60,15 +60,18 @@ instead of allocating unbounded memory.
 """
 from __future__ import annotations
 
+import hashlib
+import hmac
 import pickle
 import queue
+import secrets
 import select
 import socket
 import struct
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple, Union
 
 try:  # optional wire codec for control frames; pickle is the fallback
     import msgpack as _msgpack
@@ -93,6 +96,21 @@ _CODE_KIND = {v: k for k, v in _KIND_CODE.items()}
 #: default frame cap — far above any sane wave shard, far below "the
 #: driver pickled the whole input set into one frame by accident"
 DEFAULT_MAX_FRAME_BYTES = 256 << 20
+
+
+def _wait_readable(sock: socket.socket, timeout: Optional[float]) -> bool:
+    """Block until ``sock`` is readable (or ``timeout`` elapses).
+
+    ``select.select`` silently caps out at FD_SETSIZE (1024): in a
+    500+-node fleet every fd past that raises ``ValueError``, which
+    reads as a dead connection. ``poll`` has no fd-number limit."""
+    if hasattr(select, "poll"):
+        p = select.poll()
+        p.register(sock.fileno(), select.POLLIN)
+        ms = None if timeout is None else max(0, int(timeout * 1000 + 0.999))
+        return bool(p.poll(ms))
+    readable, _, _ = select.select([sock], [], [], timeout)
+    return bool(readable)
 
 
 class TransportError(RuntimeError):
@@ -150,6 +168,26 @@ def _decode(codec: bytes, body: bytes) -> Any:
     if codec == b"P":
         return pickle.loads(body)
     raise ProtocolError(f"unknown payload codec {codec!r}")
+
+
+def encode_frame(kind: str, payload: Any,
+                 max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES) -> bytes:
+    """Serialize one frame to its wire form (length prefix + kind byte +
+    codec byte + body). Shared by the blocking ``SocketChannel.send``
+    and the pump's non-blocking buffered writer."""
+    codec, body = _encode(payload)
+    if len(body) > max_frame_bytes:
+        raise PayloadTooLarge(
+            f"{kind} payload {len(body)} bytes exceeds the frame cap "
+            f"{max_frame_bytes}")
+    return struct.pack("!I", len(body) + 2) + _KIND_CODE[kind] + codec + body
+
+
+def handshake_mac(secret: bytes, nonce: bytes, node_id: str) -> str:
+    """The HMAC a connecting node must present: SHA-256 over the server
+    nonce + its claimed node id, keyed by the fleet's shared secret."""
+    return hmac.new(secret, nonce + node_id.encode("utf-8"),
+                    hashlib.sha256).hexdigest()
 
 
 def _approx_payload_bytes(payload: Any) -> int:
@@ -220,6 +258,20 @@ class InprocChannel:
             raise ChannelClosed("peer closed the channel")
         return frame
 
+    def recv_nowait(self) -> Optional[Frame]:
+        """Non-blocking recv for the frame pump's queue-poll path: one
+        buffered frame, ``None`` if the queue is momentarily empty."""
+        if self.closed:
+            raise ChannelClosed("recv on a closed channel")
+        try:
+            frame = self._recv_q.get_nowait()
+        except queue.Empty:
+            return None
+        if frame.kind == _CLOSE:
+            self.closed = True
+            raise ChannelClosed("peer closed the channel")
+        return frame
+
     def close(self) -> None:
         if self.closed:
             return
@@ -250,18 +302,23 @@ class SocketChannel:
         self._slock = threading.Lock()
         self._buf = bytearray()
         self.closed = False
+        # a FramePump that owns this channel installs a sink here:
+        # send() then serializes into the pump's per-connection buffer
+        # (non-blocking flush on the pump thread) instead of sendall —
+        # keeping send() the single choke point on every carrier
+        self._sink: Optional[Callable[[bytes], None]] = None
 
     def send(self, kind: str, payload: Any = None) -> int:
         """Write one frame; returns the exact bytes put on the wire
         (length prefix + kind + codec + body) for the fabric's
         bytes-on-wire accounting."""
-        codec, body = _encode(payload)
-        if len(body) > self.max_frame_bytes:
-            raise PayloadTooLarge(
-                f"{kind} payload {len(body)} bytes exceeds the frame cap "
-                f"{self.max_frame_bytes}")
-        frame = (struct.pack("!I", len(body) + 2) + _KIND_CODE[kind]
-                 + codec + body)
+        frame = encode_frame(kind, payload, self.max_frame_bytes)
+        if self.closed:
+            raise ChannelClosed("send on a closed channel")
+        sink = self._sink
+        if sink is not None:          # pump-owned: buffered, non-blocking
+            sink(frame)
+            return len(frame)
         with self._slock:
             if self.closed:
                 raise ChannelClosed("send on a closed channel")
@@ -304,14 +361,13 @@ class SocketChannel:
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
                     return None
-            # wait via select, NOT settimeout: the socket timeout is
-            # socket-wide, so a recv-side timeout would also abort a
+            # wait via poll/select, NOT settimeout: the socket timeout
+            # is socket-wide, so a recv-side timeout would also abort a
             # concurrent blocking sendall mid-frame in another thread
             # (poisoning the channel and falsely condemning a healthy
-            # node); select leaves the socket blocking for writers
+            # node); polling leaves the socket blocking for writers
             try:
-                readable, _, _ = select.select([self._sock], [], [],
-                                               remaining)
+                readable = _wait_readable(self._sock, remaining)
             except (OSError, ValueError) as e:   # fd closed under us
                 self.closed = True
                 raise ChannelClosed(f"connection dropped: {e}") from e
@@ -354,7 +410,30 @@ class NodePort:
     driver_channel: Callable[..., Any]
 
 
-class InprocTransport:
+class _PumpOwner:
+    """Mixin: a transport owns ONE FramePump shared by every agent built
+    on it — the whole fleet's scheduler side is one event-loop thread."""
+
+    def _init_pump(self):
+        self._pump = None
+        self._pump_lock = threading.Lock()
+
+    @property
+    def pump(self):
+        from repro.dist.pump import FramePump  # local: pump imports us
+        with self._pump_lock:
+            if self._pump is None or not self._pump.alive:
+                self._pump = FramePump(name=f"{self.name}-pump")
+            return self._pump
+
+    def _close_pump(self):
+        with self._pump_lock:
+            pump, self._pump = self._pump, None
+        if pump is not None:
+            pump.close()
+
+
+class InprocTransport(_PumpOwner):
     """Today's queues, behind the interface: a fresh queue pair per node.
     Pass a ``multiprocessing`` context as ``ctx`` to get queues that
     cross a spawn boundary (process-hosted nodes)."""
@@ -363,6 +442,7 @@ class InprocTransport:
 
     def __init__(self, max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES):
         self.max_frame_bytes = max_frame_bytes
+        self._init_pump()
 
     def create(self, node_id: str, ctx=None) -> NodePort:
         qf = ctx.Queue if ctx is not None else queue.Queue
@@ -373,25 +453,60 @@ class InprocTransport:
                         lambda timeout=None: driver)
 
     def close(self) -> None:
-        pass
+        self._close_pump()
 
 
-class SocketTransport:
-    """Localhost TCP, one connection per node. The scheduler side listens;
-    a connecting worker's first frame is a ``HEARTBEAT`` carrying its
-    node id — the handshake IS a lease renewal. ``create(node_id)`` may
-    be called before or after the worker dials in; ``driver_channel()``
-    blocks until the matching connection lands (or times out)."""
+#: bind hosts that listen on every interface — they need a distinct
+#: advertise host, since peers cannot dial "0.0.0.0"
+_WILDCARD_HOSTS = ("0.0.0.0", "::", "")
+
+
+class SocketTransport(_PumpOwner):
+    """TCP, one connection per node. The scheduler side listens; a
+    connecting worker's first frame is a ``HEARTBEAT`` carrying its node
+    id — the handshake IS a lease renewal. ``create(node_id)`` may be
+    called before or after the worker dials in; ``driver_channel()``
+    blocks until the matching connection lands (or times out).
+
+    Defaults keep the old localhost-only behavior; ``bind_host`` /
+    ``port`` / ``advertise_host`` open the fabric to remote nodes (bind
+    ``0.0.0.0`` and advertise a routable name), and ``secret`` arms a
+    shared-secret HMAC challenge folded into the handshake: the server
+    sends a nonce in a HEARTBEAT, the node answers with
+    ``HMAC-SHA256(secret, nonce + node_id)``, and a bad (or missing) MAC
+    closes the connection before ANY frame of it is processed.
+
+    A node that authenticates but was never ``create()``-ed locally is a
+    *remote self-registration*: it is handed to ``on_unclaimed(node_id,
+    capacity, channel)`` when set (the backend wires this to its elastic
+    join path) instead of waiting for a claim that will never come."""
 
     name = "socket"
 
     def __init__(self, max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES,
-                 accept_timeout_s: float = 30.0):
+                 accept_timeout_s: float = 30.0,
+                 bind_host: str = "127.0.0.1", port: int = 0,
+                 advertise_host: Optional[str] = None,
+                 secret: Optional[Union[str, bytes]] = None):
         self.max_frame_bytes = max_frame_bytes
         self.accept_timeout_s = accept_timeout_s
-        self._srv = socket.create_server(("127.0.0.1", 0))
+        self._init_pump()
+        self.secret = secret.encode("utf-8") if isinstance(secret, str) \
+            else secret
+        self._srv = socket.create_server((bind_host, port))
         self._srv.settimeout(0.2)
-        self.address = self._srv.getsockname()
+        self.bind_host = bind_host
+        bound = self._srv.getsockname()
+        if advertise_host is not None:
+            adv = advertise_host
+        elif bind_host in _WILDCARD_HOSTS:
+            adv = socket.gethostname()  # best effort; pass advertise_host
+        else:
+            adv = bind_host
+        self.advertise_host = adv
+        self.address = (adv, bound[1])
+        self.on_unclaimed: Optional[Callable] = None
+        self._expected: set = set()
         self._waiting: dict = {}
         self._wlock = threading.Lock()
         self._closing = False
@@ -417,7 +532,11 @@ class SocketTransport:
 
     def _handshake(self, conn: socket.socket) -> None:
         ch = SocketChannel(conn, self.max_frame_bytes)
+        nonce = None
         try:
+            if self.secret is not None:
+                nonce = secrets.token_bytes(16)
+                ch.send(HEARTBEAT, {"challenge": nonce.hex()})
             frame = ch.recv(timeout=10.0)
         except TransportError:
             ch.close()
@@ -425,12 +544,39 @@ class SocketTransport:
         if frame is None or frame.kind != HEARTBEAT:
             ch.close()
             return
-        self._waiter(str(frame.payload)).put(ch)
+        payload = frame.payload
+        if isinstance(payload, dict):
+            node_id = str(payload.get("node"))
+            capacity = payload.get("capacity")
+            mac = payload.get("mac")
+        else:
+            node_id, capacity, mac = str(payload), None, None
+        if self.secret is not None:
+            expect = handshake_mac(self.secret, nonce, node_id)
+            if not (isinstance(mac, str) and hmac.compare_digest(mac, expect)):
+                ch.close()   # bad MAC: poisoned before any frame lands
+                return
+        with self._wlock:
+            claimed = node_id in self._expected
+        cb = self.on_unclaimed
+        if not claimed and cb is not None:
+            try:
+                cb(node_id, capacity, ch)
+            except Exception:
+                ch.close()
+            return
+        self._waiter(node_id).put(ch)
 
     def create(self, node_id: str, ctx=None) -> NodePort:
+        with self._wlock:
+            self._expected.add(node_id)
         waiter = self._waiter(node_id)
-        endpoint = ("socket", (tuple(self.address), node_id,
-                               self.max_frame_bytes))
+        endpoint = ("socket", {"address": tuple(self.address),
+                               "node_id": node_id,
+                               "max_frame_bytes": self.max_frame_bytes,
+                               "secret": self.secret,
+                               "peer_bind_host": self.bind_host,
+                               "peer_advertise_host": self.advertise_host})
 
         def driver_channel(timeout: Optional[float] = None):
             try:
@@ -443,18 +589,43 @@ class SocketTransport:
 
     @staticmethod
     def connect(address, node_id: str,
-                max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES
-                ) -> SocketChannel:
-        """Worker-side dial-in (runs on the node, possibly in another
-        process): open the connection and announce liveness."""
-        sock = socket.create_connection(tuple(address), timeout=10.0)
+                max_frame_bytes: int = DEFAULT_MAX_FRAME_BYTES,
+                secret: Optional[Union[str, bytes]] = None,
+                capacity: Optional[int] = None,
+                timeout: float = 10.0) -> SocketChannel:
+        """Worker-side dial-in (runs on the node, possibly on another
+        host): open the connection, answer the HMAC challenge when a
+        ``secret`` is armed, and announce liveness (+ capacity, for
+        remote self-registration)."""
+        if isinstance(secret, str):
+            secret = secret.encode("utf-8")
+        sock = socket.create_connection(tuple(address), timeout=timeout)
         sock.settimeout(None)
         ch = SocketChannel(sock, max_frame_bytes)
-        ch.send(HEARTBEAT, node_id)
+        if secret is not None:
+            frame = ch.recv(timeout=timeout)
+            if (frame is None or frame.kind != HEARTBEAT
+                    or not isinstance(frame.payload, dict)
+                    or "challenge" not in frame.payload):
+                ch.close()
+                raise TransportError(
+                    "expected an auth challenge from the scheduler — is "
+                    "its transport armed with the same secret?")
+            nonce = bytes.fromhex(frame.payload["challenge"])
+            hello = {"node": node_id,
+                     "mac": handshake_mac(secret, nonce, node_id)}
+            if capacity is not None:
+                hello["capacity"] = int(capacity)
+            ch.send(HEARTBEAT, hello)
+        elif capacity is not None:
+            ch.send(HEARTBEAT, {"node": node_id, "capacity": int(capacity)})
+        else:
+            ch.send(HEARTBEAT, node_id)
         return ch
 
     def close(self) -> None:
         self._closing = True
+        self._close_pump()
         try:
             self._srv.close()
         except OSError:
@@ -469,7 +640,12 @@ def open_worker_channel(endpoint: tuple):
     if kind == "inproc":
         return spec
     if kind == "socket":
-        address, node_id, cap = spec
+        if isinstance(spec, dict):
+            return SocketTransport.connect(
+                spec["address"], spec["node_id"],
+                spec.get("max_frame_bytes", DEFAULT_MAX_FRAME_BYTES),
+                secret=spec.get("secret"))
+        address, node_id, cap = spec     # pre-auth tuple spec
         return SocketTransport.connect(address, node_id, cap)
     raise ValueError(f"unknown worker endpoint kind {kind!r}")
 
