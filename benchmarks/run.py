@@ -849,6 +849,24 @@ def _fleet_app(x):
     return np.asarray(x, np.float32) * 2.0
 
 
+_BOOT_W = (np.linspace(-1.0, 1.0, 64 * 64, dtype=np.float32)
+           .reshape(64, 64))
+
+
+def _obs_boot_app(x):
+    """The launched 'instance' for fig_obs: a shard costs ~1 ms of real,
+    deterministic compute — a stand-in for instance boot work. fig_fleet
+    keeps its app at ~zero cost because it measures the bare scheduler;
+    the obs gate instead asks whether tracing+metrics steal throughput
+    from a launch wave in the fabric's operating regime, which the paper
+    shows is instance-cost-bound, not scheduler-bound."""
+    t = _BOOT_W
+    for _ in range(192):
+        t = np.tanh(t @ _BOOT_W)      # bounded: no overflow, no drift
+    # fold the work into the output so it cannot be dead-code-eliminated
+    return np.asarray(x, np.float32) * 2.0 + t.min() * 0.0
+
+
 class _TrivialWorkerHandle:
     def __init__(self, out, rec):
         self.out, self.rec = out, rec
@@ -1006,6 +1024,139 @@ def bench_fig_fleet():
     return rows
 
 
+def bench_fig_obs():
+    """fig_obs: the observability overhead gate plus one captured wave
+    trace.
+
+    A fig_fleet-width fleet (thread nodes, socket wire) runs timed
+    launch reps with tracing+metrics OFF and ON, interleaved so drift
+    hits both arms equally; the gate is the MEDIAN of per-pair
+    throughput ratios (on/off) and HARD-FAILS under 0.97 —
+    observability may not cost more than 3% of launch throughput.
+
+    Unlike fig_fleet's zero-cost app (which isolates the bare
+    scheduler), the launched instance here carries ~1 ms of real
+    compute (:func:`_obs_boot_app`): the paper's launch regime is
+    instance-boot-bound, and the gate asks what observability costs in
+    THAT regime — a wave of zero-work instances on a single-core host
+    measures scheduler Python against itself, where no per-shard
+    instrumentation whatsoever could stay under 3%.
+
+    With the pillars on, one extra ``LLMapReduce`` wave is captured and
+    exported as Chrome-trace JSON (``REPRO_OBS_TRACE_OUT`` overrides the
+    path; the file opens directly at https://ui.perfetto.dev) whose span
+    tree links scheduler dispatch -> pump send -> node exec -> harvest.
+    """
+    from repro.core.llmr import LLMapReduce
+    from repro.dist.backend import DistributedBackend
+    from repro.dist.node import spawn_local_nodes
+    from repro.dist.registry import NodeRegistry
+    from repro.dist.transport import SocketTransport
+    from repro.obs import (REGISTRY, TRACER, disable_observability,
+                           enable_observability)
+
+    n_nodes = 16 if _QUICK else 64
+    pairs = 7 if _QUICK else 9
+    inner = 5                         # launches per timed arm
+    _raise_nofile(4 * n_nodes + 256)
+    registry = NodeRegistry(heartbeat_timeout_s=max(2.5, n_nodes / 100.0),
+                            shards=16)
+    transport = SocketTransport()
+    agents = spawn_local_nodes(
+        n_nodes, registry, transport=transport,
+        backend=_TrivialWorkerBackend(),
+        heartbeat_s=0.25, overlap_staging=False)
+    be = DistributedBackend(nodes=agents, registry=registry,
+                            transport=transport,
+                            overlap_staging=False, stage_dedup=False,
+                            reweight=False)
+    disable_observability()
+    REGISTRY.clear()
+    TRACER.clear()
+    try:
+        n = 4 * n_nodes
+        x = np.arange(n * 8, dtype=np.float32).reshape(n, 8)
+        expect = x * 2.0
+
+        def arm(obs_on: bool) -> float:
+            (enable_observability if obs_on
+             else disable_observability)()
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                out, _ = be.launch(_obs_boot_app, x, n)
+            wall = time.perf_counter() - t0
+            np.testing.assert_allclose(np.asarray(out), expect)
+            return wall
+
+        arm(False)                    # warm both paths before timing
+        arm(True)
+        off_walls, on_walls, ratios = [], [], []
+        for _ in range(pairs):
+            off = arm(False)
+            on = arm(True)
+            off_walls.append(off)
+            on_walls.append(on)
+            ratios.append(off / on)   # on-arm throughput / off-arm
+        disable_observability()
+        med = float(np.median(ratios))
+        off_rate = inner * n / float(np.median(off_walls))
+        on_rate = inner * n / float(np.median(on_walls))
+
+        # capture one traced wave through the full llmr tree
+        enable_observability()
+        TRACER.clear()
+        llmr = LLMapReduce(backend=be)
+        _, rep = llmr.map_reduce(_obs_boot_app, x)
+        # node registries piggyback on HEARTBEAT at >= 1s intervals:
+        # give every node one beat before reading the fleet rollup
+        deadline = time.perf_counter() + 4.0
+        while (REGISTRY.nodes_rollup().get("node.shards", 0) < n_nodes
+               and time.perf_counter() < deadline):
+            time.sleep(0.05)
+        disable_observability()
+        path = os.environ.get("REPRO_OBS_TRACE_OUT") or os.path.join(
+            tempfile.mkdtemp(prefix="repro-obs-"), "wave_trace.json")
+        TRACER.export_json(path)
+        spans = TRACER.spans()
+        names = {s["name"] for s in spans}
+
+        rows = [
+            ("fig_obs_off_rate", off_rate,
+             f"instances_per_s={off_rate:.0f} n_nodes={n_nodes} "
+             f"wave_n={n} pairs={pairs} inner={inner}"),
+            ("fig_obs_on_rate", on_rate,
+             f"instances_per_s={on_rate:.0f} "
+             f"frames_out={rep.metrics.get('pump.frames_out', 0)} "
+             f"node_shards="
+             f"{REGISTRY.nodes_rollup().get('node.shards', 0)}"),
+            ("fig_obs_overhead", med,
+             f"median_throughput_ratio={med:.4f} "
+             f"overhead_frac={max(0.0, 1.0 - med):.4f} (gate: >= 0.97)"),
+            ("fig_obs_trace", float(len(spans)),
+             f"spans={len(spans)} trace={path}"),
+        ]
+        if med < 0.97:
+            raise RuntimeError(
+                f"fig_obs: observability costs "
+                f"{(1.0 - med) * 100:.1f}% of launch throughput "
+                f"(median on/off ratio {med:.4f} < 0.97)")
+        missing = {"llmr.map_reduce", "dispatch", "shard", "pump.send",
+                   "node.exec", "harvest"} - names
+        if missing:
+            raise RuntimeError(
+                f"fig_obs: captured wave trace is missing span "
+                f"name(s) {sorted(missing)} — the scheduler->core tree "
+                f"is broken")
+        return rows
+    finally:
+        disable_observability()
+        REGISTRY.clear()
+        TRACER.clear()
+        for a in agents:
+            a.kill()
+        transport.close()
+
+
 _CACHE_PROBE = """
 import os, numpy as np
 import jax, jax.numpy as jnp
@@ -1130,6 +1281,7 @@ BENCHES = {
     "fig_dist": bench_fig_dist,
     "fig_stage_dedup": bench_fig_stage_dedup,
     "fig_fleet": bench_fig_fleet,
+    "fig_obs": bench_fig_obs,
     "cache": bench_persistent_compile_cache,
     "wine": bench_wine_env_setup,
     "train": bench_train_steps,

@@ -12,6 +12,13 @@ persistent AOT compile cache, plus the paper-scale model comparison.
 (and node/core fan-out) are picked per wave from t_schedule /
 t_first_result / drain, AIMD-style, instead of a static knob.
 
+``--obs`` turns on fabric-wide observability for the launch: every wave
+joins one span tree (``llmr.map_reduce`` -> dispatch -> shard ->
+pump.send -> node stage/exec -> harvest) and the metric registry
+(pump/registry/chunk-cache/node counters) is printed after the run.
+``--trace-out PATH`` saves the trace as Chrome-trace JSON — open it
+directly at https://ui.perfetto.dev.
+
 ``--nodes N`` (N > 1) launches through the distributed fabric
 (``repro.dist``): one dispatch per wave fans out across N local node
 agents — each with its own backend, compile cache, and heartbeat lease —
@@ -33,6 +40,8 @@ from repro.core.launch_model import CURVES, copy_time
 from repro.core.llmr import LLMapReduce
 from repro.core.staging import stage_parallel_pull, synth_env, tree_bytes
 from repro.core.telemetry import nodes_rollup, stage_rollup, table
+from repro.obs import TRACER, enable_observability
+from repro.obs.trace import flame_summary
 
 
 def app(x):
@@ -90,12 +99,21 @@ def main():
                          "fabric (with --nodes > 1): every shard payload "
                          "travels whole, the A/B baseline for the "
                          "bytes-on-wire split printed after the launch")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable fabric-wide tracing + metrics for the "
+                         "launch; prints the span-tree flame summary and "
+                         "key fabric counters afterwards")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="with --obs: also save the launch trace as "
+                         "Chrome-trace JSON (open at ui.perfetto.dev)")
     ap.add_argument("--compare", action="store_true",
                     help="also time the array backend for contrast")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent AOT cache dir (a second run of this "
                          "script launches without compiling)")
     args = ap.parse_args()
+    if args.obs:
+        enable_observability()
 
     # Step 1: stage the 'application environment' (paper Fig 5)
     env = synth_env(mb=4.0)
@@ -152,6 +170,26 @@ def main():
                   f"{dedup_note}")
     print("\nper-wave launch records (per-level: sched -> node -> core):")
     print(table(report.records[:4], title=f"first waves of {args.n}"))
+    if args.obs:
+        spans = TRACER.spans()
+        print(f"\nlaunch span tree ({len(spans)} spans, scheduler -> "
+              f"pump -> node -> harvest):")
+        print(flame_summary(spans))
+        shown = []
+        for k, v in sorted(report.metrics.items()):
+            if isinstance(v, dict):               # histogram: mean + count
+                if v.get("count"):
+                    shown.append(f"  {k}: mean {v['sum'] / v['count']:.4g}"
+                                 f" over {v['count']} obs")
+            elif v:
+                shown.append(f"  {k}: {v:,.0f}")
+        if shown:
+            print("fabric metrics over the launch window:")
+            print("\n".join(shown))
+        if args.trace_out:
+            TRACER.export_json(args.trace_out)
+            print(f"trace written to {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
     if args.compare:
         # warm BOTH first (untimed) so the timed contrast is pure launch
         # time — their cache keys differ (donation), so each needs its

@@ -58,6 +58,8 @@ from repro.core.backend import (LaunchBackend, concat_outputs,
                                 make_backend)
 from repro.core.compile_cache import CompileCache
 from repro.core.telemetry import LaunchRecord, Timer
+from repro.obs import metrics as _obs
+from repro.obs.trace import TRACER
 
 
 @dataclass
@@ -69,6 +71,7 @@ class MapReduceReport:
     t_reduce: float = 0.0
     t_total: float = 0.0
     autoscale: List[WaveDecision] = field(default_factory=list)
+    metrics: dict = field(default_factory=dict)  # registry delta for this call
 
     @property
     def n_instances(self) -> int:
@@ -238,6 +241,13 @@ class LLMapReduce:
         outs: dict = {}
         slots: List[_Slot] = []
         state = {"lo": 0, "wi": 0}
+        m_prev = _obs.REGISTRY.snapshot() if _obs.REGISTRY.enabled else None
+        # root of this call's span tree; pushed as the thread's current
+        # span so backend dispatch spans (and their shard/pump/node
+        # descendants) parent to it
+        root = TRACER.start("llmr.map_reduce", where="driver",
+                            attrs={"n": n, "backend": self.scheduler_kind},
+                            push=True)
 
         # -- the unified poll/harvest loop's moves ----------------------
         def threshold() -> Optional[float]:
@@ -326,6 +336,8 @@ class LLMapReduce:
                     speculate(slot)
 
         def harvest(slot: _Slot, winner: int) -> None:
+            hs = TRACER.start("harvest", parent=root, where="driver",
+                              attrs={"wave": slot.wi})
             out, rec = slot.attempts[winner].result()
             now = time.perf_counter()
             dt = now - slot.t_attempt[winner]
@@ -362,6 +374,8 @@ class LLMapReduce:
             report.records.append(rec)
             outs[slot.wi] = out
             slots.remove(slot)
+            TRACER.finish(hs, attempts=len(slot.attempts),
+                          n=slot.span[1] - slot.span[0])
             if controller is not None:
                 controller.observe(rec, dt,
                                    straggler=len(slot.attempts) > 1
@@ -444,23 +458,32 @@ class LLMapReduce:
                 tick = min(tick * 2, 2e-3)
 
         # -- drive -------------------------------------------------------
-        while state["lo"] < n or slots:
-            while state["lo"] < n and len(slots) < depth:
-                dispatch_next()
-                sweep()      # opportunistic harvest keeps the pipe hot
-            if slots and (len(slots) >= depth or state["lo"] >= n):
-                drain_one()
-        report.waves = state["wi"]
+        try:
+            while state["lo"] < n or slots:
+                while state["lo"] < n and len(slots) < depth:
+                    dispatch_next()
+                    sweep()  # opportunistic harvest keeps the pipe hot
+                if slots and (len(slots) >= depth or state["lo"] >= n):
+                    drain_one()
+            report.waves = state["wi"]
 
-        result = [outs[i] for i in range(report.waves)]
-        if reduce_fn is not None:
-            t = Timer()
-            flat = _concat_waves(result)
-            result = reduce_fn(flat)
-            report.t_reduce = t.lap()
-        else:
-            result = _concat_waves(result)
+            result = [outs[i] for i in range(report.waves)]
+            if reduce_fn is not None:
+                t = Timer()
+                flat = _concat_waves(result)
+                result = reduce_fn(flat)
+                report.t_reduce = t.lap()
+            else:
+                result = _concat_waves(result)
+        finally:
+            # finish (and pop) the root even on failure so the thread's
+            # current-span stack never leaks into the caller's next call
+            TRACER.finish(
+                root, waves=state["wi"],
+                redispatches=report.speculative_redispatches)
         report.t_total = t_all.lap()
+        if m_prev is not None:
+            report.metrics = _obs.REGISTRY.delta(m_prev)
         return result, report
 
 

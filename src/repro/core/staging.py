@@ -87,6 +87,7 @@ class Stager:
     def _materialize(self, produce: Callable[[], Any],
                      overlapped: bool) -> tuple:
         t0 = time.perf_counter()
+        t0_wall = time.time()
         b0 = (self._busy_clock() if overlapped and self._busy_clock
               else None)
         staged = produce()
@@ -95,9 +96,13 @@ class Stager:
         if b0 is not None:
             hidden = min(max(self._busy_clock() - b0, 0.0), dt)
         nbytes = tree_bytes(staged)
+        # wall-clock endpoints (time.time(), comparable across processes)
+        # let tracing place this stage interval on the fabric timeline —
+        # an overlapped stage visibly runs UNDER the previous shard's exec
         info = {"t_stage": dt, "hidden_s": hidden, "bytes": nbytes,
                 "gb_per_s": (nbytes / dt / 1e9) if dt > 0 else 0.0,
-                "overlapped": overlapped}
+                "overlapped": overlapped,
+                "t0_wall": t0_wall, "t1_wall": t0_wall + dt}
         self.stats["shards"] += 1
         self.stats["bytes"] += nbytes
         self.stats["t_stage"] += dt

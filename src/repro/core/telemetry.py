@@ -71,7 +71,9 @@ class LaunchRecord:
 
     @property
     def rate(self) -> float:
-        return self.n_instances / self.total if self.total > 0 else float("inf")
+        # a record with no measured cost has no meaningful rate; 0.0 keeps
+        # the CSV row parseable (inf breaks float columns downstream)
+        return self.n_instances / self.total if self.total > 0 else 0.0
 
     def levels(self) -> Dict[str, float]:
         """Per-level timings of the launch tree: the scheduler level is the
@@ -142,6 +144,7 @@ def stage_rollup(records: List[LaunchRecord]) -> Dict[str, Any]:
     wire = delivered = 0
     hits = misses = 0
     saw_dedup = False
+    latest_cache: Dict[str, dict] = {}
     for r in records:
         st = r.extra.get("stage")
         if st:
@@ -152,15 +155,27 @@ def stage_rollup(records: List[LaunchRecord]) -> Dict[str, Any]:
             dd = st.get("dedup")
             if dd:
                 saw_dedup = True
+                # fallback for reports without per-node detail; a wave's
+                # cache_hits is already a SUM over nodes, so max() across
+                # waves is only safe when the node set never changes
                 hits = max(hits, dd.get("cache_hits", 0))
                 misses = max(misses, dd.get("cache_misses", 0))
+        # node cache counters are cumulative: keep each node's LATEST
+        # snapshot (records are wave-ordered), then sum across nodes —
+        # max() over per-wave sums conflates different nodes' counters
+        for nr in r.extra.get("node_records", []):
+            nc = (nr.get("stage_dedup") or {}).get("node_cache")
+            if nc:
+                latest_cache[nr["node"]] = nc
     out: Dict[str, Any] = {
         "wall_s": wall, "hidden_s": hidden,
         "hidden_frac": hidden / wall if wall > 0 else 0.0,
         "bytes_on_wire": wire, "bytes_delivered": delivered}
+    if latest_cache:
+        saw_dedup = True
+        hits = sum(c.get("hits", 0) for c in latest_cache.values())
+        misses = sum(c.get("misses", 0) for c in latest_cache.values())
     if saw_dedup:
-        # per-wave dedup rollups carry CUMULATIVE node cache counters;
-        # the latest (largest) snapshot is the whole-report truth
         out["cache_hit_rate"] = (hits / (hits + misses)
                                  if hits + misses else 0.0)
     return out

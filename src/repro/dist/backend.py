@@ -66,6 +66,7 @@ from repro.dist.chunks import (DEFAULT_CHUNK_BYTES,
 from repro.dist.node import NodeAgent, ShardTask, spawn_local_nodes
 from repro.dist.registry import DEAD, LEFT, NodeInfo, NodeRegistry
 from repro.dist.transport import make_transport
+from repro.obs.trace import TRACER
 
 
 class NoAliveNodesError(RuntimeError):
@@ -618,19 +619,27 @@ class DistributedBackend:
             raise NoAliveNodesError(
                 "dispatch with no alive nodes "
                 f"(registry: {self.registry.rollup()})")
-        weights = self._weights(infos)
-        sizes = self._stable_split(n, [i.node_id for i in infos], weights)
+        # the wave's dispatch span: pushed as the thread's current span,
+        # so every shard span NodeAgent.submit opens parents to it
+        span = TRACER.start("dispatch", where="driver",
+                            attrs={"n": n, "nodes": len(infos)}, push=True)
         shards: List[_Shard] = []
-        lo = 0
-        for info, w in zip(infos, sizes):
-            if w == 0:
-                continue
-            sub = _slice_tree(chunk, lo, lo + w)
-            task = self.submit_shard(info, fn, sub, w, lanes,
-                                     row_offset=lo)
-            shards.append(_Shard(info.node_id, lo, lo + w, sub, task,
-                                 time.perf_counter()))
-            lo += w
+        try:
+            weights = self._weights(infos)
+            sizes = self._stable_split(n, [i.node_id for i in infos],
+                                       weights)
+            lo = 0
+            for info, w in zip(infos, sizes):
+                if w == 0:
+                    continue
+                sub = _slice_tree(chunk, lo, lo + w)
+                task = self.submit_shard(info, fn, sub, w, lanes,
+                                         row_offset=lo)
+                shards.append(_Shard(info.node_id, lo, lo + w, sub, task,
+                                     time.perf_counter()))
+                lo += w
+        finally:
+            TRACER.finish(span, shards=len(shards))
         rec.t_schedule = t.lap()
         rec.fanout = {"sched": 1, "node": len(shards), "core": lanes or 1}
         rec.extra["n_nodes"] = len(shards)

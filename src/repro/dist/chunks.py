@@ -49,6 +49,8 @@ import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import metrics as _obs
+
 #: staging chunk size — small enough that one hot byte-range dedups
 #: across shards, large enough that per-chunk framing stays negligible
 DEFAULT_CHUNK_BYTES = 256 << 10
@@ -88,8 +90,9 @@ class ChunkCache:
         self._pins: Dict[str, int] = {}
         self._lock = threading.Lock()
         self.total_bytes = 0
-        self.stats = {"hits": 0, "misses": 0, "puts": 0,
-                      "evictions": 0, "evicted_bytes": 0}
+        self.stats = _obs.StatsDict("chunks.cache", {
+            "hits": 0, "misses": 0, "puts": 0,
+            "evictions": 0, "evicted_bytes": 0})
 
     def get(self, digest: str) -> Optional[bytes]:
         """Staging lookup: refreshes recency and counts toward the
@@ -190,8 +193,8 @@ class ChunkDirectory:
         self._hints: Dict[Tuple[str, str], int] = {}
         self._pinned: Dict[str, List[str]] = {}
         self._lock = threading.Lock()
-        self.stats = {"planned": 0, "deduped": 0, "peer_hints": 0,
-                      "resends": 0}
+        self.stats = _obs.StatsDict("chunks.dir", {
+            "planned": 0, "deduped": 0, "peer_hints": 0, "resends": 0})
 
     # -- peer endpoints ---------------------------------------------------
     def set_peer(self, node_id: str, spec) -> None:

@@ -81,6 +81,8 @@ from repro.dist.transport import (CHUNK, CHUNK_REQ, HEARTBEAT, LEAVE, PEER,
                                   RESULT, STAGE, SUBMIT, InprocTransport,
                                   PayloadTooLarge, ProtocolError,
                                   TransportError, open_worker_channel)
+from repro.obs import metrics as _obs
+from repro.obs.trace import TRACER, new_span_id, new_trace_id
 
 
 def _node_cache_dir(node_id: str) -> str:
@@ -164,6 +166,14 @@ class ShardTask:
             cb(self.task_id)
 
     _on_cancel: Optional[Callable] = None
+    #: shard span wire context (tracing on): the (trace_id, span_id)
+    #: tuple SUBMIT/STAGE frames carry as "tc". The span's id exists from
+    #: submit time (children parent to it) but the dict is only built at
+    #: trace-read time — obs_parent/obs_t0/obs_pc0 hold what's needed.
+    obs_ctx = None
+    obs_parent = None
+    obs_t0 = 0.0
+    obs_pc0 = 0.0
 
 
 def _lane_kwargs(backend, n: int, inner_lanes: Optional[int]) -> dict:
@@ -428,9 +438,14 @@ class _ChunkAssembler:
 
 def _run_shard(node_id: str, backend, stager, ctl: _WorkerCtl, channel,
                item: dict, numpy_out: bool,
-               assembler: Optional[_ChunkAssembler] = None) -> None:
+               assembler: Optional[_ChunkAssembler] = None,
+               node_metrics: Optional[Any] = None) -> None:
     """Execute one SUBMIT frame's shard and report its RESULT frame."""
     task_id = item["task_id"]
+    # trace context propagated in the SUBMIT frame: (trace_id, span_id)
+    # of the scheduler's shard span — node-side spans parent to it and
+    # ride home inside the RESULT frame
+    tc = item.get("tc")
     try:
         if task_id in ctl.cancelled:
             # cancelled scheduler-side (failover / abandoned race loser):
@@ -448,6 +463,8 @@ def _run_shard(node_id: str, backend, stager, ctl: _WorkerCtl, channel,
                          if assembler is not None else None))
         else:
             chunk, sinfo = stager.stage_inline(item["chunk"])
+        t_exec0 = time.time()
+        pc0 = time.perf_counter()
         ctl.busy_begin()
         try:
             if ctl.throttle_s:
@@ -457,16 +474,39 @@ def _run_shard(node_id: str, backend, stager, ctl: _WorkerCtl, channel,
                                         **kw).result()
         finally:
             ctl.busy_end()
+        t_exec = time.perf_counter() - pc0
         if ctl.killed.is_set():       # died mid-compute: result is lost
             return
         rec.extra["node_id"] = node_id
         rec.t_stage = sinfo["t_stage"]
         rec.extra["stage"] = sinfo
+        if node_metrics is not None and node_metrics.enabled:
+            node_metrics.counter("node.shards").inc()
+            node_metrics.histogram("node.stage_s").observe(sinfo["t_stage"])
+            node_metrics.histogram("node.exec_s").observe(t_exec)
         if numpy_out:
             import jax
             out = jax.tree_util.tree_map(np.asarray, out)
-        channel.send(RESULT, {"task_id": task_id, "ok": True,
-                              "out": out, "rec": rec})
+        result = {"task_id": task_id, "ok": True, "out": out, "rec": rec}
+        if tc:
+            # compact span tuples (name, t0, dur, attrs): the worker
+            # thread ships timings only — ids and full span dicts are
+            # built scheduler-side at trace-read time, off every hot path
+            spans = []
+            if "t0_wall" in sinfo:
+                # the stage interval as it actually happened — an
+                # overlapped stage renders UNDER the previous shard's exec
+                spans.append(
+                    ("node.stage", sinfo["t0_wall"],
+                     max(sinfo["t1_wall"] - sinfo["t0_wall"], 0.0),
+                     {"hidden_s": sinfo.get("hidden_s", 0.0),
+                      "wait_s": sinfo.get("t_wait_s", 0.0),
+                      "bytes": sinfo.get("bytes", 0),
+                      "overlapped": sinfo.get("overlapped", False)}))
+            spans.append(("node.exec", t_exec0, t_exec,
+                          {"n": item["n"]}))
+            result["spans"] = spans
+        channel.send(RESULT, result)
     except (PayloadTooLarge, ProtocolError) as e:
         # PayloadTooLarge: the RESULT itself is too big for the wire;
         # ProtocolError: chunk assembly failed loudly (digest mismatch,
@@ -505,7 +545,8 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
                  chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES,
                  peer_mode: Optional[str] = None,
                  peer_bind_host: str = "127.0.0.1",
-                 peer_advertise_host: Optional[str] = None) -> None:
+                 peer_advertise_host: Optional[str] = None,
+                 obs_metrics: Optional[bool] = None) -> None:
     """The node side, identical for every host x transport combination:
     heartbeat thread (beats BEFORE the heavy imports — booting is not
     being dead), receiver thread (stages STAGE payloads overlapped with
@@ -516,7 +557,41 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
     heavy imports."""
     workq: "queue.Queue" = queue.Queue()
 
+    # the node's own metrics registry (NOT the process-global one: a
+    # thread-hosted fleet shares the process, and per-node numbers must
+    # stay per-node). Enablement inherits the global flag, so a thread
+    # fleet spawned after enable_observability() reports automatically;
+    # process/remote hosts pass the flag explicitly.
+    node_metrics = _obs.MetricsRegistry(
+        enabled=_obs.REGISTRY.enabled if obs_metrics is None
+        else obs_metrics)
+    # filled in below as the heavy setup completes; the heartbeat thread
+    # starts before any of it exists
+    obs_src = {"cache": None, "stager": None, "assembler": None}
+
+    def hb_payload():
+        """Metrics piggyback: a HEARTBEAT that carries the node's latest
+        cumulative snapshot home (latest-wins scheduler-side)."""
+        m = node_metrics.snapshot()
+        cc = obs_src["cache"]
+        if cc is not None:
+            for k, v in cc.stats.items():
+                m[f"node.cache.{k}"] = v
+        st = obs_src["stager"]
+        if st is not None:
+            for k, v in st.stats.items():
+                m[f"node.stage.{k}"] = v
+        asm = obs_src["assembler"]
+        if asm is not None:
+            for k, v in asm.stats.items():
+                m[f"node.assembler.{k}"] = v
+        return {"node": node_id, "m": m}
+
     def hb_loop() -> None:
+        # metrics ride at most one beat per interval — a beat is ~tens of
+        # bytes, a snapshot can be a few hundred; the lease must stay cheap
+        m_interval = max(heartbeat_s * 4.0, 0.25)
+        m_next = 0.0
         while not ctl.killed.is_set():
             # a graceful leave keeps beating until the worker has DRAINED
             # (unfinished_tasks covers the item the worker already popped:
@@ -524,8 +599,19 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
             # is never a failure)
             if ctl.stopping.is_set() and workq.unfinished_tasks == 0:
                 return
+            if obs_metrics is None:
+                # inherited enablement tracks the global toggle live, so
+                # a thread fleet follows enable/disable_observability()
+                # mid-run (the fig_obs on/off interleave relies on it)
+                node_metrics.enabled = _obs.REGISTRY.enabled
+            payload: Any = node_id
+            if node_metrics.enabled:
+                now = time.monotonic()
+                if now >= m_next:
+                    m_next = now + m_interval
+                    payload = hb_payload()
             try:
-                channel.send(HEARTBEAT, node_id)
+                channel.send(HEARTBEAT, payload)
             except TransportError:
                 return
             time.sleep(heartbeat_s)
@@ -573,6 +659,7 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
     stager = Stager(busy_clock=ctl.busy_clock)
     assembler = (_ChunkAssembler(node_id, channel, stager, chunk_cache)
                  if stage_dedup else None)
+    obs_src.update(cache=chunk_cache, stager=stager, assembler=assembler)
 
     def recv_loop() -> None:
         while not ctl.killed.is_set():
@@ -632,7 +719,7 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
             if item is None:          # drained past the LEAVE sentinel
                 break
             _run_shard(node_id, backend, stager, ctl, channel, item,
-                       numpy_out, assembler)
+                       numpy_out, assembler, node_metrics)
         finally:
             workq.task_done()
     if peer_server is not None:
@@ -651,7 +738,8 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
 def _process_main(node_id: str, endpoint: tuple, heartbeat_s: float,
                   backend_kind: str, cache_dir: str,
                   stage_dedup: bool = False,
-                  chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES) -> None:
+                  chunk_cache_bytes: int = DEFAULT_CHUNK_CACHE_BYTES,
+                  obs_metrics: bool = False) -> None:
     """Entry point of a process-hosted node: connect first (cheap), beat
     while jax imports, then serve shards until LEAVE or SIGTERM."""
     channel = open_worker_channel(endpoint)
@@ -666,7 +754,8 @@ def _process_main(node_id: str, endpoint: tuple, heartbeat_s: float,
                  numpy_out=True, stage_dedup=stage_dedup,
                  chunk_cache_bytes=chunk_cache_bytes, peer_mode=peer_mode,
                  peer_bind_host=spec.get("peer_bind_host", "127.0.0.1"),
-                 peer_advertise_host=spec.get("peer_advertise_host"))
+                 peer_advertise_host=spec.get("peer_advertise_host"),
+                 obs_metrics=obs_metrics)
 
 
 class NodeAgent:
@@ -773,7 +862,10 @@ class NodeAgent:
                 target=_process_main,
                 args=(node_id, self._port.endpoint, self.heartbeat_s,
                       backend_kind, cache_dir, self.stage_dedup,
-                      self.chunk_cache_bytes),
+                      self.chunk_cache_bytes,
+                      # obs enablement snapshotted at spawn: the child
+                      # has its own registry and cannot see ours
+                      _obs.REGISTRY.enabled),
                 daemon=True)
         if start:
             self.start()
@@ -913,6 +1005,17 @@ class NodeAgent:
         yield the same digests however the wave was split."""
         task = ShardTask(fn, chunk, n, inner_lanes)
         task._on_cancel = self._cancel_hook
+        if TRACER.enabled:
+            # the per-shard span: its id is allocated now (the context
+            # rides in the frames so node-side spans land in the same
+            # tree), closed by the RESULT frame; the span dict itself is
+            # deferred off this per-shard dispatch path
+            parent = TRACER.context()
+            tid = parent[0] if parent is not None else new_trace_id()
+            task.obs_ctx = (tid, new_span_id())
+            task.obs_parent = parent[1] if parent is not None else None
+            task.obs_t0 = time.time()
+            task.obs_pc0 = time.perf_counter()
         with self._lock:
             self._pending[task.task_id] = task
         if self._numpy_out or self.stage_dedup:
@@ -922,10 +1025,14 @@ class NodeAgent:
             chunk = jax.tree_util.tree_map(np.asarray, chunk)
         sub = {"task_id": task.task_id, "fn": fn, "n": n,
                "inner_lanes": inner_lanes}
+        if task.obs_ctx is not None:
+            sub["tc"] = task.obs_ctx
         on_error = lambda e, t=task: self._send_error(t, e)  # noqa: E731
         if self.overlap_staging:
             payload = {"task_id": task.task_id, "chunk": chunk,
                        "off": row_offset}
+            if task.obs_ctx is not None:
+                payload["tc"] = task.obs_ctx
             sub["staged"] = True
             self.pump.submit_job(
                 self.node_id,
@@ -969,6 +1076,13 @@ class NodeAgent:
         encode failed BEFORE any bytes hit the stream, so the channel is
         intact — fail just this shard, keep the connection."""
         task.set_error(err)
+        ctx, task.obs_ctx = task.obs_ctx, None
+        if ctx is not None:
+            TRACER.defer("shard", (ctx[0], task.obs_parent), task.obs_t0,
+                         time.perf_counter() - task.obs_pc0, "driver",
+                         {"node": self.node_id, "task_id": task.task_id,
+                          "ok": False, "send_error": repr(err)},
+                         sid=ctx[1])
         self._unpin(task.task_id)
 
     def _cancel_hook(self, task_id) -> None:
@@ -1045,8 +1159,11 @@ class NodeAgent:
         # pinned until the shard resolves: a CHUNK_REQ for an evicted or
         # relay-failed chunk must always be answerable from the store
         self.directory.pin_task((self.node_id, task_id), seen)
-        frames = [(STAGE, {"task_id": task_id,
-                           "chunks": manifest, "mode": mode})]
+        stage_payload = {"task_id": task_id,
+                         "chunks": manifest, "mode": mode}
+        if "tc" in payload:
+            stage_payload["tc"] = payload["tc"]
+        frames = [(STAGE, stage_payload)]
         frames.extend((CHUNK, {"d": d, "data": data}) for d, data in to_wire)
         return frames
 
@@ -1056,6 +1173,13 @@ class NodeAgent:
         if task is None or self._killed:
             return
         self._unpin(payload["task_id"])
+        ctx, task.obs_ctx = task.obs_ctx, None
+        spans = payload.get("spans")
+        if spans and ctx is not None:
+            # node-side compact spans (stage/exec) arrive in the RESULT
+            # frame; park them for lazy expansion under this shard's
+            # span — one deque append on the pump thread, nothing more
+            TRACER.defer_result(ctx, f"node:{self.node_id}", spans)
         if payload.get("ok"):
             rec = payload["rec"]
             if rec is not None and task.wire_bytes:
@@ -1067,6 +1191,13 @@ class NodeAgent:
         else:
             task.set_error(RuntimeError(
                 f"node {self.node_id} shard failed: {payload['err']}"))
+        if ctx is not None:
+            TRACER.defer("shard", (ctx[0], task.obs_parent), task.obs_t0,
+                         time.perf_counter() - task.obs_pc0, "driver",
+                         {"node": self.node_id, "task_id": task.task_id,
+                          "n": task.n, "ok": bool(payload.get("ok")),
+                          "wire_bytes": task.wire_bytes},
+                         sid=ctx[1])
 
     def _on_chunk_req(self, payload: dict) -> None:
         """The node cannot produce chunks its manifest promised (evicted
@@ -1098,6 +1229,12 @@ class NodeAgent:
             self._booted = True
             if not self._killed:
                 self.registry.heartbeat(self.node_id)
+                p = frame.payload
+                if isinstance(p, dict) and "m" in p:
+                    # metrics piggyback: the node's cumulative snapshot
+                    # flew home on the beat — latest wins per node
+                    _obs.REGISTRY.ingest_node(p.get("node") or self.node_id,
+                                              p["m"])
         elif frame.kind == RESULT:
             self._on_result(frame.payload)
         elif frame.kind == CHUNK_REQ:
@@ -1216,6 +1353,9 @@ def _connect_main(argv: Optional[List[str]] = None) -> None:
     parser.add_argument("--peer-advertise-host", default=None,
                         help="address peers should dial for chunks "
                              "(default: this host's name)")
+    parser.add_argument("--obs-metrics", action="store_true",
+                        help="collect node-side metrics and piggyback "
+                             "them on HEARTBEAT frames")
     args = parser.parse_args(argv)
     host, _, port = args.connect.rpartition(":")
     if not host or not port.isdigit():
@@ -1238,7 +1378,8 @@ def _connect_main(argv: Optional[List[str]] = None) -> None:
                  peer_mode="tcp",
                  peer_bind_host=args.peer_bind_host,
                  peer_advertise_host=(args.peer_advertise_host
-                                      or _socket.gethostname()))
+                                      or _socket.gethostname()),
+                 obs_metrics=args.obs_metrics)
 
 
 if __name__ == "__main__":

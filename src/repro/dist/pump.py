@@ -49,6 +49,14 @@ from typing import Any, Callable, Iterable, Optional, Tuple
 from repro.dist.transport import (HEARTBEAT, ChannelClosed, Frame,
                                   PayloadTooLarge, SocketChannel,
                                   TransportError)
+from repro.obs import metrics as _obs
+from repro.obs.trace import TRACER
+
+#: fixed buckets for the drain-batch-size histogram (frames per drain)
+_BATCH_BOUNDS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+#: how often (pump wall seconds) a busy_frac sample lands in the series
+_BUSY_SAMPLE_S = 0.25
 
 #: poll cadence for queue-backed (inproc) channels — no fd to select on,
 #: so the pump bounds its sleep while any are registered
@@ -115,6 +123,21 @@ class FramePump:
         self.stats = {"frames_in": 0, "frames_out": 0, "beats_coalesced": 0,
                       "jobs": 0, "ticks": 0, "callback_errors": 0,
                       "busy_s": 0.0, "wall_s": 0.0}
+        # observability: registry instruments, touched only when the
+        # global metrics registry is enabled (checked once per loop
+        # wakeup into _m_on, so the disabled hot path pays one attribute
+        # read). Per-kind counters are created lazily on first use.
+        self._m_on = False
+        self._m_bytes_in = _obs.counter("pump.bytes_in")
+        self._m_bytes_out = _obs.counter("pump.bytes_out")
+        self._m_frames_in = _obs.counter("pump.frames_in")
+        self._m_frames_out = _obs.counter("pump.frames_out")
+        self._m_outbuf_hwm = _obs.gauge("pump.outbuf_hwm")
+        self._m_drain_batch = _obs.histogram("pump.drain_batch",
+                                             bounds=_BATCH_BOUNDS)
+        self._m_kind_in: dict = {}
+        self._m_kind_out: dict = {}
+        self._next_busy_sample = _BUSY_SAMPLE_S
 
     # -- registration --------------------------------------------------
 
@@ -249,6 +272,12 @@ class FramePump:
             self.stats["busy_s"] += time.thread_time() - c0
             self.stats["wall_s"] += t1 - t_prev
             t_prev = t1
+            self._m_on = _obs.REGISTRY.enabled
+            if self._m_on and self.stats["wall_s"] >= self._next_busy_sample:
+                self._next_busy_sample = self.stats["wall_s"] + _BUSY_SAMPLE_S
+                _obs.REGISTRY.series_append(f"{self.name}.busy_frac",
+                                            self.stats["wall_s"],
+                                            self.busy_frac())
 
     def _timeout(self):
         t = None
@@ -291,6 +320,8 @@ class FramePump:
             ch.closed = True
             self._condemn(conn, ChannelClosed("peer closed the connection"))
             return
+        if self._m_on:
+            self._m_bytes_in.inc(len(data))
         ch._buf += data
         self._drain_channel(conn)
 
@@ -319,6 +350,10 @@ class FramePump:
                 last_beat = frame             # latest beat wins per tick
                 continue
             frames.append(frame)
+        if self._m_on:
+            batch = len(frames) + (1 if last_beat is not None else 0)
+            if batch:
+                self._m_drain_batch.observe(batch)
         if last_beat is not None:
             self._deliver(conn, last_beat)
         for f in frames:
@@ -333,8 +368,17 @@ class FramePump:
             return conn.channel._parse_one()
         return conn.channel.recv_nowait()
 
+    def _kind_counter(self, cache: dict, direction: str, kind: str):
+        c = cache.get(kind)
+        if c is None:
+            c = cache[kind] = _obs.counter(f"pump.frames_{direction}.{kind}")
+        return c
+
     def _deliver(self, conn, frame):
         self.stats["frames_in"] += 1
+        if self._m_on:
+            self._m_frames_in.inc()
+            self._kind_counter(self._m_kind_in, "in", frame.kind).inc()
         try:
             conn.on_frame(frame)
         except Exception:
@@ -360,14 +404,38 @@ class FramePump:
                 # resolved by the death path, same as the old send loop
                 continue
             self.stats["jobs"] += 1
+            # the per-shard "pump send" span: serialization + buffering
+            # of this job's frames, parented to the shard span whose
+            # context the submitter stashed on the task. The pump thread
+            # is every wave's critical path, so it only takes the two
+            # clock readings and defers the span-dict build to read time.
+            ctx = pc0 = t0_wall = None
+            if TRACER.enabled and task is not None:
+                ctx = getattr(task, "obs_ctx", None)
+                if ctx is not None:
+                    t0_wall = time.time()
+                    pc0 = time.perf_counter()
             try:
                 frames = prepare()
+                sent_bytes = 0
                 if frames is not None:
                     for kind, payload in frames:
                         n = self._push(conn, kind, payload)
                         if task is not None:
                             task.wire_bytes += n
                         self.stats["frames_out"] += 1
+                        sent_bytes += n
+                        if self._m_on:
+                            self._m_frames_out.inc()
+                            self._m_bytes_out.inc(n)
+                            self._kind_counter(self._m_kind_out, "out",
+                                               kind).inc()
+                if pc0 is not None:
+                    TRACER.defer("pump.send", ctx, t0_wall,
+                                 time.perf_counter() - pc0, "pump",
+                                 {"node": node_id, "bytes": sent_bytes,
+                                  "skipped": frames is None})
+                    pc0 = None
             except PayloadTooLarge as e:
                 self._job_error(on_error, e)
             except (ChannelClosed, OSError) as e:
@@ -376,7 +444,13 @@ class FramePump:
                 self._condemn(conn, err)
             except Exception as e:
                 self._job_error(on_error, e)
+            if pc0 is not None:           # job died mid-send
+                TRACER.defer("pump.send", ctx, t0_wall,
+                             time.perf_counter() - pc0, "pump",
+                             {"node": node_id, "error": True})
             if conn.outbuf and not conn.dead:
+                if self._m_on:
+                    self._m_outbuf_hwm.max(len(conn.outbuf))
                 self._flush(conn)
 
     def _job_error(self, on_error, e):

@@ -50,7 +50,13 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.autoscale import Ewma
+from repro.obs import metrics as _obs
 from repro.runtime.fault import HeartbeatDetector
+
+#: relay-gap histogram buckets (seconds between successive beats from
+#: one node, as seen scheduler-side — gaps approaching the lease mean
+#: the relay path, not the node, is the risk)
+_GAP_BOUNDS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0)
 
 ALIVE = "alive"
 SUSPECT = "suspect"
@@ -80,13 +86,16 @@ class _Shard:
     """One lock-shard of the node table: its slice of the ids, their
     lease detector, and the lock both live under."""
 
-    __slots__ = ("lock", "nodes", "detector")
+    __slots__ = ("lock", "nodes", "detector", "last_beat")
 
     def __init__(self, heartbeat_timeout_s: float, clock):
         self.lock = threading.RLock()
         self.nodes: Dict[str, NodeInfo] = {}
         self.detector = HeartbeatDetector(timeout_s=heartbeat_timeout_s,
                                           clock=clock)
+        # per-node previous-beat clock, feeding the relay-gap histogram
+        # (only maintained while the metrics registry is enabled)
+        self.last_beat: Dict[str, float] = {}
 
 
 class NodeRegistry:
@@ -118,6 +127,11 @@ class NodeRegistry:
         # added detection latency is negligible against the lease itself)
         self._sweep_interval_s = heartbeat_timeout_s / 20.0
         self._last_sweep = float("-inf")
+        self._m_registrations = _obs.counter("registry.registrations")
+        self._m_renewals = _obs.counter("registry.renewals")
+        self._m_expiries = _obs.counter("registry.expiries")
+        self._m_relay_gap = _obs.histogram("registry.relay_gap_s",
+                                           bounds=_GAP_BOUNDS)
 
     def _shard(self, node_id: str) -> _Shard:
         return self._shards[hash(node_id) % len(self._shards)]
@@ -142,6 +156,7 @@ class NodeRegistry:
             info.capacity = capacity
             info.state = ALIVE
             sh.detector.beat(node_id, now=now)
+        self._m_registrations.inc()
         self._bump()
         return info
 
@@ -153,6 +168,7 @@ class NodeRegistry:
             if info is not None:
                 info.state = LEFT
             sh.detector.forget(node_id)
+            sh.last_beat.pop(node_id, None)
         self._bump()
 
     def heartbeat(self, node_id: str) -> bool:
@@ -162,14 +178,23 @@ class NodeRegistry:
         fabric is re-dispatching its work."""
         sh = self._shard(node_id)
         recovered = False
+        m_on = _obs.REGISTRY.enabled
         with sh.lock:
             info = sh.nodes.get(node_id)
             if info is None or info.state in (DEAD, LEFT):
                 return False
             sh.detector.beat(node_id)
+            if m_on:
+                now = self.clock()
+                prev = sh.last_beat.get(node_id)
+                sh.last_beat[node_id] = now
+                if prev is not None:
+                    self._m_relay_gap.observe(now - prev)
             if info.state == SUSPECT:
                 info.state = ALIVE
                 recovered = True
+        if m_on:
+            self._m_renewals.inc()
         if recovered:
             self._bump()
         return True
@@ -187,6 +212,8 @@ class NodeRegistry:
             info.state = DEAD
             info.failures += 1
             sh.detector.forget(node_id)
+            sh.last_beat.pop(node_id, None)
+        self._m_expiries.inc()
         self._bump()
 
     # -- lookups -----------------------------------------------------------
@@ -228,6 +255,8 @@ class NodeRegistry:
                         info.state = DEAD
                         info.failures += 1
                         sh.detector.forget(info.node_id)
+                        sh.last_beat.pop(info.node_id, None)
+                        self._m_expiries.inc()
                         moved[info.node_id] = DEAD
                     elif age > self.suspect_after_s:
                         if info.state != SUSPECT:

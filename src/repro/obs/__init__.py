@@ -1,0 +1,40 @@
+"""Unified observability: fabric-wide tracing + a process-local metrics
+registry.
+
+Two pillars, both designed to be nearly free when disabled:
+
+- ``repro.obs.trace``: lightweight spans in a bounded ring buffer. Trace
+  context rides inside the wire frames themselves (SUBMIT/STAGE carry the
+  parent span id; RESULT carries the node-side spans back), so one wave
+  renders as a single span tree from ``llmr.map_reduce`` down to worker
+  exec. Export as Chrome-trace JSON (open in Perfetto) or a text flame
+  summary.
+- ``repro.obs.metrics``: counters / gauges / fixed-bucket histograms with
+  cheap hot-path increments and snapshot/delta reads. Node-side registries
+  fly home piggybacked on HEARTBEAT frames.
+
+Enable both with :func:`enable_observability`; ``python -m repro.obs.report
+trace.json`` renders a captured trace.
+"""
+from .metrics import REGISTRY, MetricsRegistry, counter, gauge, histogram
+from .trace import TRACER, Tracer, new_span_id
+
+__all__ = [
+    "REGISTRY", "MetricsRegistry", "counter", "gauge", "histogram",
+    "TRACER", "Tracer", "new_span_id",
+    "enable_observability", "disable_observability",
+]
+
+
+def enable_observability(tracing: bool = True, metrics: bool = True) -> None:
+    """Turn on the global tracer and/or metrics registry for this process."""
+    if tracing:
+        TRACER.enable()
+    if metrics:
+        REGISTRY.enable()
+
+
+def disable_observability() -> None:
+    """Turn both pillars off (buffers are kept; use .clear() to drop them)."""
+    TRACER.disable()
+    REGISTRY.disable()

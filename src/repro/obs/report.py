@@ -1,0 +1,64 @@
+"""Render a saved wave trace: ``python -m repro.obs.report trace.json``.
+
+Prints a text flame summary of the span tree plus per-name aggregate
+stats. The input is the Chrome-trace JSON written by
+``Tracer.export_json`` (the same file opens directly in Perfetto at
+https://ui.perfetto.dev).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+from .trace import flame_summary, spans_from_chrome
+
+
+def name_stats(spans: List[dict]) -> List[tuple]:
+    agg: Dict[str, List[float]] = {}
+    for s in spans:
+        agg.setdefault(s.get("name", "?"), []).append(s.get("dur", 0.0))
+    rows = []
+    for name, durs in agg.items():
+        durs.sort()
+        rows.append((name, len(durs), sum(durs),
+                     durs[len(durs) // 2], durs[-1]))
+    rows.sort(key=lambda r: -r[2])
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Text flame summary of a captured fabric trace.")
+    ap.add_argument("trace", help="Chrome-trace JSON file "
+                    "(Tracer.export_json output)")
+    ap.add_argument("--trace-id", default=None,
+                    help="restrict to one trace id (default: all)")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    spans = spans_from_chrome(doc)
+    if args.trace_id:
+        spans = [s for s in spans if s.get("trace_id") == args.trace_id]
+    if not spans:
+        print("no spans found", file=sys.stderr)
+        return 1
+
+    print(f"{len(spans)} spans, "
+          f"{len({s.get('trace_id') for s in spans})} trace(s)\n")
+    print("== span tree ==")
+    print(flame_summary(spans))
+    print("\n== by name ==")
+    print(f"{'name':<28} {'n':>6} {'total_ms':>10} {'p50_ms':>9} "
+          f"{'max_ms':>9}")
+    for name, n, tot, p50, mx in name_stats(spans):
+        print(f"{name:<28} {n:>6} {tot * 1e3:>10.3f} {p50 * 1e3:>9.3f} "
+              f"{mx * 1e3:>9.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

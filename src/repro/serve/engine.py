@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.backend import ArrayBackend
 from repro.core.telemetry import RequestRecord, class_summary, slo_attainment
+from repro.obs import metrics as _obs
 from repro.models.lm import (cache_init, decode_step, paged_cache_init,
                              paged_clear, paged_decode_step, paged_prefill,
                              prefill)
@@ -96,6 +97,11 @@ class _EngineBase:
                       "preemptions": 0, "pool_exhausted": 0,
                       "stall_steps": 0, "prefill_dispatches": 0,
                       "compile_sources": {}}
+        # registry instruments (created once; observed only while enabled)
+        self._m_ttft = _obs.histogram("serve.ttft_s")
+        self._m_tpot = _obs.histogram("serve.tpot_s")
+        self._m_preempt = _obs.counter("serve.preemptions")
+        self._m_occupancy = _obs.gauge("serve.pool_occupancy")
 
     # -- capacity guard ----------------------------------------------------
     def _request_capacity(self) -> int:
@@ -148,7 +154,11 @@ class _EngineBase:
         req.finish_reason = reason or req.finish_reason or (
             "length" if req.budget == req.max_new else "capacity")
         req.t_done = time.perf_counter()
-        self.records.append(req.record())
+        rec = req.record()
+        self.records.append(rec)
+        if _obs.REGISTRY.enabled and rec.n_tokens > 0:
+            self._m_ttft.observe(rec.ttft_s)
+            self._m_tpot.observe(rec.tpot_s)
         self._release_slot(i)
 
     def step(self) -> None:
@@ -387,6 +397,8 @@ class PagedServeEngine(_EngineBase):
         req.t_first = None
         req.preemptions += 1
         self.stats["preemptions"] += 1
+        if _obs.REGISTRY.enabled:
+            self._m_preempt.inc()
         self.scheduler.requeue_front(req)
         self._release_slot(i)
 
@@ -552,6 +564,8 @@ class PagedServeEngine(_EngineBase):
         to unblock the rest; a lone request larger than the entire pool
         is finished early with ``finish_reason="pool_exhausted"``."""
         self._stalled.clear()
+        if _obs.REGISTRY.enabled:
+            self._m_occupancy.set(self.pool.occupancy)
         ps = self.pool.page_size
         for i, req in enumerate(self.active):
             if req is None:

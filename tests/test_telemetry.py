@@ -1,0 +1,150 @@
+"""Telemetry edge cases: the stage_rollup cache-hit aggregation fix
+(sum each node's LATEST cumulative snapshot, never max() across waves),
+zero-cost records keeping CSV rows parseable, and the rollup/summary
+helpers on empty, all-superseded, and detail-free reports."""
+from repro.core.telemetry import (HEADER, LaunchRecord, RequestRecord,
+                                  class_summary, nodes_rollup,
+                                  slo_attainment, stage_rollup, table)
+
+
+def _wave(wave, node_caches, hits, misses):
+    """One distributed wave record: per-node CUMULATIVE cache snapshots
+    in node_records plus the wave-level dedup sum (the old code's only
+    input)."""
+    r = LaunchRecord("dist", n_instances=8)
+    r.extra["stage"] = {
+        "wall_s": 0.2, "hidden_s": 0.1,
+        "bytes_on_wire": 100, "bytes_delivered": 400,
+        "dedup": {"cache_hits": hits, "cache_misses": misses},
+    }
+    r.extra["node_records"] = [
+        {"node": nid, "n": 4, "lo": 0, "hi": 4, "t_wave": 0.1,
+         "stage_dedup": {"node_cache": dict(cache)}}
+        for nid, cache in node_caches.items()]
+    r.extra["wave"] = wave
+    return r
+
+
+def test_stage_rollup_sums_each_nodes_latest_snapshot():
+    """Two nodes with UNEQUAL hit rates: node a ends at 9/1, node b at
+    1/9. The report truth is 10 hits / 10 misses = 0.5 — the old
+    max()-over-waves of per-wave sums cannot produce it (it conflates
+    counters from different nodes and different instants)."""
+    records = [
+        _wave(0, {"a": {"hits": 4, "misses": 1},
+                  "b": {"hits": 0, "misses": 5}}, hits=4, misses=6),
+        _wave(1, {"a": {"hits": 9, "misses": 1},
+                  "b": {"hits": 1, "misses": 9}}, hits=10, misses=10),
+    ]
+    out = stage_rollup(records)
+    assert out["cache_hit_rate"] == 10 / 20
+    # staging wall/bytes still sum across waves
+    assert out["wall_s"] == 0.4
+    assert out["bytes_on_wire"] == 200
+
+
+def test_stage_rollup_node_leaving_fleet_keeps_its_last_counters():
+    """A node that served wave 0 then left: its final snapshot still
+    counts. Waves after its departure must not erase it (the old max()
+    of per-wave sums silently could, when the survivor's sum was
+    smaller)."""
+    records = [
+        _wave(0, {"a": {"hits": 8, "misses": 2},
+                  "b": {"hits": 1, "misses": 1}}, hits=9, misses=3),
+        _wave(1, {"b": {"hits": 2, "misses": 2}}, hits=2, misses=2),
+    ]
+    out = stage_rollup(records)
+    # a's last snapshot (8/2) + b's last (2/2) = 10 hits / 4 misses
+    assert out["cache_hit_rate"] == 10 / 14
+
+
+def test_stage_rollup_falls_back_to_wave_dedup_without_node_detail():
+    r = LaunchRecord("dist", n_instances=4)
+    r.extra["stage"] = {"wall_s": 0.1, "hidden_s": 0.0,
+                        "dedup": {"cache_hits": 3, "cache_misses": 1}}
+    out = stage_rollup([r])
+    assert out["cache_hit_rate"] == 0.75
+
+
+def test_stage_rollup_without_dedup_has_no_hit_rate():
+    r = LaunchRecord("dist", n_instances=4)
+    r.extra["stage"] = {"wall_s": 0.1, "hidden_s": 0.05}
+    out = stage_rollup([r])
+    assert "cache_hit_rate" not in out
+    assert out["hidden_frac"] == 0.5
+
+
+def test_zero_cost_record_rate_is_zero_and_row_parseable():
+    r = LaunchRecord("serial", n_instances=0)
+    assert r.rate == 0.0
+    row = r.row()
+    assert "inf" not in row
+    cols = row.split(",")
+    assert len(cols) == len(HEADER.split(","))
+    float(cols[7])                        # rate column parses as float
+    # the full table round-trips through a naive CSV reader
+    for line in table([r]).splitlines()[1:]:
+        [float(c) for c in line.split(",")[1:]]
+
+
+# ----------------------------------------------------------------------
+# rollups and summaries on degenerate reports
+# ----------------------------------------------------------------------
+
+def test_rollups_on_empty_report():
+    assert nodes_rollup([]) == {}
+    out = stage_rollup([])
+    assert out["wall_s"] == 0.0 and out["hidden_frac"] == 0.0
+    assert "cache_hit_rate" not in out
+    assert class_summary([]) == {}
+    assert slo_attainment([], 0.5) == 1.0  # vacuously met
+
+
+def test_rollups_on_all_superseded_report():
+    """Every attempt lost a re-dispatch race: rollups still read their
+    cost, instance counting excludes them."""
+    rs = []
+    for i in range(3):
+        r = LaunchRecord("dist", n_instances=4, t_spawn=0.1)
+        r.extra["superseded_by_redispatch"] = True
+        r.extra["node_records"] = [{"node": "a", "n": 4, "t_wave": 0.1}]
+        rs.append(r)
+    roll = nodes_rollup(rs)
+    assert roll["a"]["waves"] == 3
+    assert roll["a"]["instances"] == 12
+    assert all(r.superseded for r in rs)
+
+
+def test_rollups_tolerate_records_missing_optional_extra():
+    """Single-host records carry no node_records/stage/fanout at all."""
+    r = LaunchRecord("array", n_instances=16, t_spawn=0.2)
+    assert r.nodes() == {}
+    assert r.n_nodes == 1
+    assert not r.node_failure
+    assert nodes_rollup([r]) == {}
+    assert stage_rollup([r])["wall_s"] == 0.0
+    # node_records entries may themselves omit optional keys
+    r2 = LaunchRecord("dist", n_instances=4)
+    r2.extra["node_records"] = [{"node": "a"}]     # bare minimum
+    roll = nodes_rollup([r, r2])
+    assert roll["a"]["instances"] == 0
+    assert roll["a"]["t_stage"] == 0.0
+    assert stage_rollup([r2])["wall_s"] == 0.0     # no crash, no dedup
+    assert "cache_hit_rate" not in stage_rollup([r2])
+
+
+def test_class_summary_with_unserved_requests():
+    recs = [
+        RequestRecord(rid=0, priority="interactive", ttft_s=0.1,
+                      tpot_s=0.01, n_tokens=8),
+        RequestRecord(rid=1, priority="interactive", ttft_s=0.0,
+                      tpot_s=0.0, n_tokens=0,
+                      finish="rejected_over_capacity"),
+        RequestRecord(rid=2, priority="batch", ttft_s=0.9, tpot_s=0.02,
+                      n_tokens=4, preemptions=2),
+    ]
+    cs = class_summary(recs)
+    assert cs["interactive"]["n"] == 2            # rejected still counted
+    assert cs["interactive"]["p50_ttft_s"] == 0.1  # but not averaged in
+    assert cs["batch"]["preemptions"] == 2
+    assert slo_attainment(recs, 0.5) == 0.5       # 1 of 2 SERVED met it
