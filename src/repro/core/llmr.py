@@ -58,6 +58,7 @@ from repro.core.backend import (LaunchBackend, concat_outputs,
                                 make_backend)
 from repro.core.compile_cache import CompileCache
 from repro.core.telemetry import LaunchRecord, Timer
+from repro.obs import flight as _flight
 from repro.obs import metrics as _obs
 from repro.obs.trace import TRACER
 
@@ -72,6 +73,7 @@ class MapReduceReport:
     t_total: float = 0.0
     autoscale: List[WaveDecision] = field(default_factory=list)
     metrics: dict = field(default_factory=dict)  # registry delta for this call
+    health: dict = field(default_factory=dict)   # {node: verdict} at finish
 
     @property
     def n_instances(self) -> int:
@@ -324,6 +326,8 @@ class LLMapReduce:
                 if live_attempts(slot):
                     continue
                 report.node_failures += 1
+                _flight.RECORDER.trigger("wave_failure", wave=slot.wi,
+                                         span=list(slot.span))
                 speculate(slot, cause="node_failure")
 
         def check_stragglers() -> None:
@@ -370,6 +374,8 @@ class LLMapReduce:
                 rec.extra["straggler_redispatch"] = True
                 report.speculative_redispatches += 1
             wave_times.append(dt)
+            if _obs.REGISTRY.enabled:
+                _obs.REGISTRY.series_append("llmr.wave_s", time.time(), dt)
             rec.extra["t_wave"] = dt
             report.records.append(rec)
             outs[slot.wi] = out
@@ -484,6 +490,9 @@ class LLMapReduce:
         report.t_total = t_all.lap()
         if m_prev is not None:
             report.metrics = _obs.REGISTRY.delta(m_prev)
+        hv = getattr(self.backend, "health_verdicts", None)
+        if hv is not None:
+            report.health = dict(hv() or {})
         return result, report
 
 

@@ -310,6 +310,9 @@ class DistWaveHandle(WaveHandle):
             if s.attempts == 1 and s.rec is not None:
                 self.fabric.registry.observe_shard(
                     s.node_id, s.hi - s.lo, s.t_done - s.t_submit)
+        # with the wave's walls banked, refresh per-node anomaly
+        # verdicts (healthy/degraded/outlier) and keep them on the record
+        self.rec.extra["health"] = self.fabric.registry.health_eval()
         # wave-level compile source = the slowest tier any node paid
         sources = {nr["compile_source"]
                    for nr in self.rec.extra["node_records"]}
@@ -524,6 +527,11 @@ class DistributedBackend:
         """Elastic join: an agent that registered itself starts receiving
         waves at the very next ``dispatch``."""
         self.agents[agent.node_id] = agent
+
+    def health_verdicts(self) -> Dict[str, str]:
+        """Last per-node anomaly verdicts ({node_id: healthy|degraded|
+        outlier}); surfaces on ``MapReduceReport.health``."""
+        return self.registry.health_verdicts()
 
     def _alive(self) -> List[NodeInfo]:
         """Dispatch pool: strictly-alive nodes, falling back to suspects

@@ -565,6 +565,11 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
     node_metrics = _obs.MetricsRegistry(
         enabled=_obs.REGISTRY.enabled if obs_metrics is None
         else obs_metrics)
+    # incarnation nonce: rides every metrics piggyback so the scheduler
+    # can tell "this id re-registered with fresh counters" (new nonce)
+    # from "the same worker loop kept counting through a lease blip"
+    # (same nonce) — the rejoin double-count fix lives on this bit
+    incarnation = new_span_id()
     # filled in below as the heavy setup completes; the heartbeat thread
     # starts before any of it exists
     obs_src = {"cache": None, "stager": None, "assembler": None}
@@ -585,7 +590,7 @@ def _worker_loop(node_id: str, channel, ctl: _WorkerCtl,
         if asm is not None:
             for k, v in asm.stats.items():
                 m[f"node.assembler.{k}"] = v
-        return {"node": node_id, "m": m}
+        return {"node": node_id, "m": m, "i": incarnation}
 
     def hb_loop() -> None:
         # metrics ride at most one beat per interval — a beat is ~tens of
@@ -1234,7 +1239,8 @@ class NodeAgent:
                     # metrics piggyback: the node's cumulative snapshot
                     # flew home on the beat — latest wins per node
                     _obs.REGISTRY.ingest_node(p.get("node") or self.node_id,
-                                              p["m"])
+                                              p["m"],
+                                              incarnation=p.get("i"))
         elif frame.kind == RESULT:
             self._on_result(frame.payload)
         elif frame.kind == CHUNK_REQ:

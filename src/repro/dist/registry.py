@@ -50,7 +50,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.autoscale import Ewma
+from repro.obs import flight as _flight
 from repro.obs import metrics as _obs
+from repro.obs.health import HEALTHY, HealthScorer
 from repro.runtime.fault import HeartbeatDetector
 
 #: relay-gap histogram buckets (seconds between successive beats from
@@ -132,6 +134,10 @@ class NodeRegistry:
         self._m_expiries = _obs.counter("registry.expiries")
         self._m_relay_gap = _obs.histogram("registry.relay_gap_s",
                                            bounds=_GAP_BOUNDS)
+        # per-node anomaly scoring (healthy/degraded/outlier) over shard
+        # walls and beat gaps — orthogonal to the lease states above: a
+        # node can hold its lease perfectly while running 50x slow
+        self.health = HealthScorer()
 
     def _shard(self, node_id: str) -> _Shard:
         return self._shards[hash(node_id) % len(self._shards)]
@@ -148,14 +154,26 @@ class NodeRegistry:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         now = self.clock()
         sh = self._shard(node_id)
+        revived = False
         with sh.lock:
             info = sh.nodes.get(node_id)
             if info is None:
                 info = NodeInfo(node_id, capacity, registered_at=now)
                 sh.nodes[node_id] = info
+            else:
+                revived = info.state in (DEAD, LEFT)
             info.capacity = capacity
             info.state = ALIVE
             sh.detector.beat(node_id, now=now)
+        if revived:
+            # a dead/left id coming back is a NEW incarnation as far as
+            # accounting goes: retire the old piggybacked metrics into
+            # the per-node baseline (ingest_node unfolds it again if the
+            # "new" node turns out to be the same incarnation — a zombie
+            # whose beats were merely delayed) and drop health history
+            # earned by the previous life
+            _obs.REGISTRY.retire_node(node_id)
+            self.health.forget(node_id)
         self._m_registrations.inc()
         self._bump()
         return info
@@ -190,6 +208,7 @@ class NodeRegistry:
                 sh.last_beat[node_id] = now
                 if prev is not None:
                     self._m_relay_gap.observe(now - prev)
+                    self.health.observe_gap(node_id, now - prev)
             if info.state == SUSPECT:
                 info.state = ALIVE
                 recovered = True
@@ -214,6 +233,11 @@ class NodeRegistry:
             sh.detector.forget(node_id)
             sh.last_beat.pop(node_id, None)
         self._m_expiries.inc()
+        # preserve the dead incarnation's piggybacked totals (it will
+        # never heartbeat an update again) and freeze the moment for the
+        # postmortem — both no-ops unless obs / the recorder are on
+        _obs.REGISTRY.retire_node(node_id)
+        _flight.RECORDER.trigger("node_death", node=node_id, via="expire")
         self._bump()
 
     # -- lookups -----------------------------------------------------------
@@ -266,6 +290,11 @@ class NodeRegistry:
                         info.state = ALIVE
                         moved[info.node_id] = ALIVE
         if moved:
+            for nid, st in moved.items():
+                if st == DEAD:
+                    _obs.REGISTRY.retire_node(nid)
+                    _flight.RECORDER.trigger("node_death", node=nid,
+                                             via="lease_expiry")
             self._bump()
         return moved
 
@@ -356,6 +385,7 @@ class NodeRegistry:
             if info.cost is None:
                 info.cost = Ewma(alpha=0.5)
             info.cost.update(wall_s / n)
+        self.health.observe_wall(node_id, wall_s / n)
 
     def cost_per_instance(self, node_id: str) -> Optional[float]:
         sh = self._shard(node_id)
@@ -364,9 +394,24 @@ class NodeRegistry:
             return (info.cost.value
                     if info is not None and info.cost is not None else None)
 
+    def health_eval(self) -> Dict[str, str]:
+        """Recompute anomaly verdicts and stamp them onto the node table
+        (``NodeInfo.extra["health"]``, read back by ``rollup``). Called
+        once per completed wave by the backend — never per frame."""
+        verdicts = self.health.evaluate()
+        for nid, v in verdicts.items():
+            info = self.info(nid)
+            if info is not None:
+                info.extra["health"] = v
+        return verdicts
+
+    def health_verdicts(self) -> Dict[str, str]:
+        """Last computed {node_id: healthy|degraded|outlier}."""
+        return self.health.verdicts()
+
     def rollup(self) -> Dict[str, dict]:
         """Per-node summary (state, capacity, dispatched work, failures,
-        measured cost)."""
+        measured cost, anomaly verdict)."""
         self.sweep()
         out: Dict[str, dict] = {}
         for sh in self._shards:
@@ -376,6 +421,7 @@ class NodeRegistry:
                         "state": i.state, "capacity": i.capacity,
                         "waves": i.waves, "instances": i.instances,
                         "failures": i.failures,
+                        "health": i.extra.get("health", HEALTHY),
                         "cost_per_instance":
                             i.cost.value if i.cost else None}
         return out

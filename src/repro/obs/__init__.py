@@ -1,7 +1,7 @@
-"""Unified observability: fabric-wide tracing + a process-local metrics
-registry.
+"""Unified observability: fabric-wide tracing, a process-local metrics
+registry, and the live health plane built over them.
 
-Two pillars, both designed to be nearly free when disabled:
+Recording pillars, both designed to be nearly free when disabled:
 
 - ``repro.obs.trace``: lightweight spans in a bounded ring buffer. Trace
   context rides inside the wire frames themselves (SUBMIT/STAGE carry the
@@ -13,28 +13,74 @@ Two pillars, both designed to be nearly free when disabled:
   cheap hot-path increments and snapshot/delta reads. Node-side registries
   fly home piggybacked on HEARTBEAT frames.
 
-Enable both with :func:`enable_observability`; ``python -m repro.obs.report
-trace.json`` renders a captured trace.
+The live plane reads what the pillars record:
+
+- ``repro.obs.timeseries``: bounded ring time-series (downsample on
+  overflow, O(1) append) plus the background ``Sampler`` that derives
+  counter rates / gauge values / histogram window means continuously.
+- ``repro.obs.health``: per-node median/MAD anomaly scoring over shard
+  walls and heartbeat gaps -> ``healthy``/``degraded``/``outlier``
+  verdicts with hysteresis (surfaced in ``NodeRegistry`` rollups and
+  ``MapReduceReport.health``).
+- ``repro.obs.flight``: the flight recorder — atomic JSON postmortem
+  bundles on node death / wave failure / SLO breach / explicit trigger
+  (``python -m repro.obs.flight dump``).
+- ``repro.obs.statusd``: opt-in stdlib HTTP status endpoint
+  (``/healthz`` ``/fleet`` ``/slo`` ``/series`` + one HTML fleet page).
+
+Enable the pillars with :func:`enable_observability` (pass
+``sampling=True`` to also start the background sampler);
+``python -m repro.obs.report trace.json`` renders a captured trace and
+``--metrics`` renders a metrics snapshot.
 """
+from typing import Optional
+
+from .health import HealthScorer
 from .metrics import REGISTRY, MetricsRegistry, counter, gauge, histogram
+from .timeseries import RingSeries, Sampler
 from .trace import TRACER, Tracer, new_span_id
 
 __all__ = [
     "REGISTRY", "MetricsRegistry", "counter", "gauge", "histogram",
     "TRACER", "Tracer", "new_span_id",
-    "enable_observability", "disable_observability",
+    "RingSeries", "Sampler", "HealthScorer",
+    "enable_observability", "disable_observability", "sampler",
 ]
 
+#: the process-global background sampler (created on first use; running
+#: only between enable_observability(sampling=True) and
+#: disable_observability())
+_SAMPLER: Optional[Sampler] = None
 
-def enable_observability(tracing: bool = True, metrics: bool = True) -> None:
-    """Turn on the global tracer and/or metrics registry for this process."""
+
+def sampler() -> Optional[Sampler]:
+    """The global background sampler, or None if never started."""
+    return _SAMPLER
+
+
+def enable_observability(tracing: bool = True, metrics: bool = True,
+                         sampling: bool = False,
+                         sample_interval_s: float = 0.5) -> None:
+    """Turn on the global tracer and/or metrics registry for this
+    process; ``sampling=True`` also starts the background time-series
+    sampler (one snapshot read per ``sample_interval_s`` — off every
+    hot path)."""
+    global _SAMPLER
     if tracing:
         TRACER.enable()
     if metrics:
         REGISTRY.enable()
+    if sampling:
+        if _SAMPLER is None:
+            _SAMPLER = Sampler(REGISTRY, interval_s=sample_interval_s)
+        _SAMPLER.interval_s = max(0.05, sample_interval_s)
+        _SAMPLER.start()
 
 
 def disable_observability() -> None:
-    """Turn both pillars off (buffers are kept; use .clear() to drop them)."""
+    """Turn both pillars off and stop the sampler (buffers are kept;
+    use .clear() to drop them)."""
     TRACER.disable()
     REGISTRY.disable()
+    if _SAMPLER is not None:
+        _SAMPLER.stop()

@@ -23,6 +23,8 @@ from __future__ import annotations
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.timeseries import DEFAULT_CAPACITY, RingSeries
+
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
     "StatsDict", "counter", "gauge", "histogram",
@@ -131,8 +133,15 @@ class MetricsRegistry:
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._hists: Dict[str, Histogram] = {}
-        self._series: Dict[str, List[Tuple[float, float]]] = {}
+        self._series: Dict[str, RingSeries] = {}
         self._node: Dict[str, dict] = {}
+        # cross-incarnation node accounting: a dead incarnation's final
+        # snapshot folds into _node_base (so rollups keep its totals);
+        # _node_inc remembers which incarnation the live snapshot came
+        # from so a zombie that never actually restarted can be unfolded
+        self._node_base: Dict[str, dict] = {}
+        self._node_inc: Dict[str, Optional[str]] = {}
+        self._node_tomb: Dict[str, Tuple[Optional[str], dict]] = {}
 
     # -- lifecycle --------------------------------------------------------
 
@@ -157,6 +166,9 @@ class MetricsRegistry:
                 h.reset()
             self._series.clear()
             self._node.clear()
+            self._node_base.clear()
+            self._node_inc.clear()
+            self._node_tomb.clear()
 
     # -- instrument factories (memoized by name) --------------------------
 
@@ -185,17 +197,33 @@ class MetricsRegistry:
     # -- time series ------------------------------------------------------
 
     def series_append(self, name: str, t: float, v: float,
-                      maxlen: int = 4096) -> None:
-        """Append one (t, v) point to a bounded series (busy_frac etc.)."""
-        with self._lock:
-            s = self._series.setdefault(name, [])
-            s.append((t, v))
-            if len(s) > maxlen:
-                del s[: len(s) - maxlen]
+                      maxlen: int = DEFAULT_CAPACITY) -> None:
+        """Append one (t, v) point to a bounded ring series. The ring
+        (``repro.obs.timeseries.RingSeries``) downsamples pairwise on
+        overflow instead of dropping history; the hot path is one
+        lock-free append (the registry lock is taken only on first
+        creation of a series)."""
+        s = self._series.get(name)
+        if s is None:
+            with self._lock:
+                s = self._series.setdefault(name, RingSeries(maxlen))
+        s.append(t, v)
 
     def series(self, name: str) -> List[Tuple[float, float]]:
+        s = self._series.get(name)
+        return s.points() if s is not None else []
+
+    def series_tail(self, name: str, n: int) -> List[Tuple[float, float]]:
+        s = self._series.get(name)
+        return s.tail(n) if s is not None else []
+
+    def series_names(self) -> List[str]:
         with self._lock:
-            return list(self._series.get(name, ()))
+            return list(self._series)
+
+    def gauge_names(self) -> set:
+        with self._lock:
+            return set(self._gauges)
 
     # -- reads ------------------------------------------------------------
 
@@ -240,37 +268,85 @@ class MetricsRegistry:
 
     # -- node piggyback ---------------------------------------------------
 
-    def ingest_node(self, node_id: str, snap: dict) -> None:
+    def ingest_node(self, node_id: str, snap: dict,
+                    incarnation: Optional[str] = None) -> None:
         """Store a node's piggybacked snapshot (latest wins: node-side
-        counters are cumulative, so the newest snapshot is the truth)."""
+        counters are cumulative, so the newest snapshot is the truth).
+
+        ``incarnation`` is the worker loop's per-boot nonce. When a node
+        the scheduler condemned re-registers under the same id, its dead
+        incarnation's final snapshot was folded into a retained baseline
+        (:meth:`retire_node`); a snapshot arriving with the SAME
+        incarnation proves the worker never actually restarted (a zombie
+        revived by re-register), so the fold is reversed — its cumulative
+        counters already contain the "dead" totals and keeping the
+        baseline would double-count them."""
         with self._lock:
+            tomb = self._node_tomb.get(node_id)
+            if (tomb is not None and incarnation is not None
+                    and tomb[0] == incarnation):
+                _merge_snap(self._node_base.setdefault(node_id, {}),
+                            tomb[1], sign=-1)
+                del self._node_tomb[node_id]
             self._node[node_id] = snap
+            self._node_inc[node_id] = incarnation
+
+    def retire_node(self, node_id: str) -> None:
+        """A node's lease expired (or its id is being revived after
+        death): fold its last snapshot into the retained per-node
+        baseline so rollups keep the dead incarnation's totals while the
+        fresh incarnation's counters restart from zero. Idempotent — a
+        second retire with no new snapshot is a no-op."""
+        with self._lock:
+            snap = self._node.pop(node_id, None)
+            if snap is None:
+                return
+            _merge_snap(self._node_base.setdefault(node_id, {}), snap)
+            self._node_tomb[node_id] = (self._node_inc.pop(node_id, None),
+                                        snap)
 
     def node_snapshots(self) -> Dict[str, dict]:
+        """Live (current-incarnation) snapshots per node."""
         with self._lock:
             return dict(self._node)
 
     def nodes_rollup(self) -> dict:
-        """Sum counter-like values across per-node snapshots; histograms
+        """Sum counter-like values across per-node snapshots — live
+        incarnations plus retained dead-incarnation baselines; histograms
         merge bucket-wise when bounds agree."""
+        with self._lock:
+            per_node: Dict[str, dict] = {}
+            for nid, base in self._node_base.items():
+                _merge_snap(per_node.setdefault(nid, {}), base)
+            for nid, snap in self._node.items():
+                _merge_snap(per_node.setdefault(nid, {}), snap)
         out: dict = {}
-        for snap in self.node_snapshots().values():
-            for name, v in snap.items():
-                if isinstance(v, dict) and "counts" in v:
-                    h = out.get(name)
-                    if h is None or h.get("bounds") != v.get("bounds"):
-                        out[name] = {"bounds": list(v.get("bounds", ())),
-                                     "counts": list(v["counts"]),
-                                     "sum": v.get("sum", 0.0),
-                                     "count": v.get("count", 0)}
-                    else:
-                        h["counts"] = [a + b for a, b in
-                                       zip(h["counts"], v["counts"])]
-                        h["sum"] += v.get("sum", 0.0)
-                        h["count"] += v.get("count", 0)
-                elif isinstance(v, (int, float)):
-                    out[name] = out.get(name, 0) + v
+        for snap in per_node.values():
+            _merge_snap(out, snap)
         return out
+
+
+def _merge_snap(out: dict, snap: dict, sign: int = 1) -> dict:
+    """Accumulate one snapshot dict into ``out`` in place: numbers add,
+    histograms merge bucket-wise when bounds agree (else the newcomer
+    replaces). ``sign=-1`` subtracts — used to reverse a baseline fold
+    when a condemned node turns out to have been a zombie."""
+    for name, v in snap.items():
+        if isinstance(v, dict) and "counts" in v:
+            h = out.get(name)
+            if h is None or h.get("bounds") != list(v.get("bounds", ())):
+                out[name] = {"bounds": list(v.get("bounds", ())),
+                             "counts": [sign * c for c in v["counts"]],
+                             "sum": sign * v.get("sum", 0.0),
+                             "count": sign * v.get("count", 0)}
+            else:
+                h["counts"] = [a + sign * b for a, b in
+                               zip(h["counts"], v["counts"])]
+                h["sum"] += sign * v.get("sum", 0.0)
+                h["count"] += sign * v.get("count", 0)
+        elif isinstance(v, (int, float)):
+            out[name] = out.get(name, 0) + sign * v
+    return out
 
 
 #: Process-global registry. Scheduler-side instrumentation records here;

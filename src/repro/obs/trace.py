@@ -275,15 +275,22 @@ def chrome_trace(spans: List[dict]) -> dict:
     Each span becomes a complete ("ph": "X") event; ``where`` labels map
     to tids with thread_name metadata so Perfetto shows scheduler / pump /
     node lanes. span_id/parent_id ride in args for tree reconstruction.
+
+    A parent_id is only emitted when the parent span is IN this export:
+    the ring buffer overwrites oldest-first, so a long run's early roots
+    are gone while their late descendants remain — exporting the dangling
+    reference would leave every consumer re-deriving "orphan == root".
+    Dropping it makes the wrapped survivor an explicit root instead.
     """
     tids: Dict[str, int] = {}
     events: List[dict] = []
+    ids = {s.get("span_id") for s in spans if s.get("span_id")}
     for s in spans:
         where = s.get("where") or "main"
         tid = tids.setdefault(where, len(tids) + 1)
         args = dict(s.get("attrs") or {})
         args["span_id"] = s.get("span_id")
-        if s.get("parent_id"):
+        if s.get("parent_id") in ids:
             args["parent_id"] = s["parent_id"]
         args["trace_id"] = s.get("trace_id")
         events.append({

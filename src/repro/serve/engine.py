@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.backend import ArrayBackend
 from repro.core.telemetry import RequestRecord, class_summary, slo_attainment
+from repro.obs import flight as _flight
 from repro.obs import metrics as _obs
 from repro.models.lm import (cache_init, decode_step, paged_cache_init,
                              paged_clear, paged_decode_step, paged_prefill,
@@ -159,6 +160,9 @@ class _EngineBase:
         if _obs.REGISTRY.enabled and rec.n_tokens > 0:
             self._m_ttft.observe(rec.ttft_s)
             self._m_tpot.observe(rec.tpot_s)
+            now = time.time()
+            _obs.REGISTRY.series_append("serve.ttft_s", now, rec.ttft_s)
+            _obs.REGISTRY.series_append("serve.tpot_s", now, rec.tpot_s)
         self._release_slot(i)
 
     def step(self) -> None:
@@ -199,7 +203,14 @@ class _EngineBase:
         self.stats["classes"] = class_summary(self.records)
         slo = self.scheduler.target_first_result_s
         if slo is not None:
-            self.stats["slo_attainment"] = slo_attainment(self.records, slo)
+            att = slo_attainment(self.records, slo)
+            self.stats["slo_attainment"] = att
+            if _obs.REGISTRY.enabled:
+                _obs.REGISTRY.series_append("serve.slo_attainment",
+                                            time.time(), att)
+            if att < _flight.RECORDER.slo_min:
+                _flight.RECORDER.trigger("slo_breach", attainment=att,
+                                         target_first_result_s=slo)
         return self.stats
 
 

@@ -1,0 +1,411 @@
+"""The live health plane: bounded ring time-series + background
+sampler (``repro.obs.timeseries``), per-node anomaly scoring with
+hysteresis (``repro.obs.health``), flight-recorder postmortem bundles
+(``repro.obs.flight``), the HTTP status endpoint
+(``repro.obs.statusd``), and the ``report --metrics`` table render —
+plus the fabric integration: an injected slow node earns ``outlier``
+on ``MapReduceReport.health`` while its clean peers stay ``healthy``."""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.compile_cache import CompileCache
+from repro.core.llmr import LLMapReduce
+from repro.dist import DistributedBackend
+from repro.obs import (REGISTRY, TRACER, disable_observability,
+                       enable_observability, sampler)
+from repro.obs import flight
+from repro.obs.health import (DEGRADED, HEALTHY, OUTLIER, HealthScorer,
+                              robust_zscores)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.statusd import StatusServer
+from repro.obs.timeseries import RingSeries, Sampler
+
+
+def app(x):
+    return (x * 3.0).sum(axis=-1)
+
+
+@pytest.fixture()
+def obs():
+    REGISTRY.clear()
+    TRACER.clear()
+    enable_observability()
+    yield
+    disable_observability()
+    REGISTRY.clear()
+    TRACER.clear()
+
+
+# ----------------------------------------------------------------------
+# RingSeries
+# ----------------------------------------------------------------------
+
+def test_ring_series_bounded_and_extent_preserved():
+    s = RingSeries(capacity=16)
+    for i in range(10_000):
+        s.append(float(i), float(i))
+    assert len(s) <= 16                    # memory bound holds forever
+    pts = s.points()
+    # coarsened, not truncated: the first stored point still reaches
+    # back near t=0 and the last is the newest sample
+    assert pts[0][0] < 10_000 * 0.25
+    assert pts[-1][0] == 9999.0
+    assert s.stride > 1                    # downsampling actually kicked in
+    assert s.n_appended == 10_000
+
+
+def test_ring_series_merge_means_values():
+    s = RingSeries(capacity=8)
+    for i in range(8):
+        s.append(float(i), 10.0)
+    # one merge happened: stride doubled, 4 points, values preserved
+    assert s.stride == 2
+    assert [v for _, v in s.points()] == [10.0] * 4
+    # partial bucket is visible before it flushes
+    s.append(8.0, 40.0)
+    assert s.last() == (8.0, 40.0)
+
+
+def test_ring_series_summary_and_validation():
+    with pytest.raises(ValueError):
+        RingSeries(capacity=2)
+    s = RingSeries(capacity=16)
+    assert s.summary()["n_points"] == 0
+    s.append(1.0, 2.0)
+    s.append(2.0, 4.0)
+    m = s.summary()
+    assert m["n_points"] == 2 and m["mean"] == pytest.approx(3.0)
+    assert (m["t0"], m["t1"]) == (1.0, 2.0)
+
+
+# ----------------------------------------------------------------------
+# Sampler
+# ----------------------------------------------------------------------
+
+def test_sampler_derives_rates_gauges_and_hit_rates():
+    reg = MetricsRegistry(enabled=True)
+    c = reg.counter("pump.frames_out")
+    g = reg.gauge("pump.outbuf_hwm")
+    h = reg.histogram("exec_s", bounds=(1.0,))
+    hits = reg.counter("cache.hits")
+    misses = reg.counter("cache.misses")
+    smp = Sampler(reg, interval_s=0.05)
+
+    c.inc(10)
+    g.set(3)
+    assert smp.sample_once(now=100.0) == 0      # first tick is baseline
+    c.inc(20)
+    g.set(7)
+    h.observe(0.5)
+    h.observe(1.5)
+    hits.inc(3)
+    misses.inc(1)
+    assert smp.sample_once(now=102.0) > 0
+
+    def last(name):
+        return reg.series(name)[-1]
+
+    assert last("pump.frames_out.rate") == (102.0, pytest.approx(10.0))
+    assert last("pump.outbuf_hwm") == (102.0, 7.0)
+    assert last("exec_s.mean") == (102.0, pytest.approx(1.0))
+    assert last("cache.hit_rate") == (102.0, pytest.approx(0.75))
+    # a quiet histogram window writes no point
+    assert smp.sample_once(now=104.0) > 0
+    assert len(reg.series("exec_s.mean")) == 1
+
+
+def test_sampler_thread_lifecycle(obs):
+    REGISTRY.counter("tick.count")
+    smp = Sampler(REGISTRY, interval_s=0.01)
+    smp.start()
+    assert smp.start() is smp                 # idempotent
+    try:
+        import time as _t
+        deadline = _t.perf_counter() + 5.0
+        while smp.ticks < 3 and _t.perf_counter() < deadline:
+            REGISTRY.counter("tick.count").inc()
+            _t.sleep(0.005)
+        assert smp.ticks >= 3
+        assert "tick.count.rate" in REGISTRY.series_names()
+    finally:
+        smp.stop()
+    assert not smp.running
+
+
+def test_enable_observability_sampling_flag():
+    REGISTRY.clear()
+    enable_observability(sampling=True, sample_interval_s=0.05)
+    try:
+        assert sampler() is not None and sampler().running
+    finally:
+        disable_observability()
+        REGISTRY.clear()
+    assert not sampler().running
+
+
+# ----------------------------------------------------------------------
+# health scoring
+# ----------------------------------------------------------------------
+
+def test_robust_zscores_homogeneous_fleet_stays_flat():
+    vals = {f"n{i}": 0.01 + 1e-6 * i for i in range(8)}
+    zs = robust_zscores(vals)
+    assert all(abs(z) < 1.0 for z in zs.values())   # jitter never flags
+    assert robust_zscores({"only": 5.0}) == {"only": 0.0}
+
+
+def test_robust_zscores_flags_the_slow_side():
+    vals = {f"n{i}": 0.01 for i in range(7)}
+    vals["slow"] = 0.5
+    zs = robust_zscores(vals)
+    assert zs["slow"] > 50.0
+    assert all(abs(zs[f"n{i}"]) < 1.0 for i in range(7))
+
+
+def test_scorer_flags_outlier_with_hysteresis_and_recovery():
+    hs = HealthScorer(window=4, min_peers=3)
+    for _ in range(4):
+        for i in range(4):
+            hs.observe_wall(f"n{i}", 0.01)
+        hs.observe_wall("slow", 0.5)
+    v = hs.evaluate()
+    assert v["slow"] == OUTLIER
+    assert all(v[f"n{i}"] == HEALTHY for i in range(4))
+    assert hs.zscore("slow") >= hs.enter_z
+    # recovery: the slow node speeds back up; once its window median
+    # drops below exit_z it returns to healthy
+    for _ in range(4):
+        for i in range(4):
+            hs.observe_wall(f"n{i}", 0.01)
+        hs.observe_wall("slow", 0.01)
+    assert hs.evaluate()["slow"] == HEALTHY
+    d = hs.detail()
+    assert d["slow"]["verdict"] == HEALTHY
+    assert d["slow"]["wall_per_instance_s"] == pytest.approx(0.01)
+
+
+def test_scorer_single_hiccup_never_flips_a_verdict():
+    """One GIL stall (a single 50x sample) must not flag a node: the
+    per-node recent statistic is the median of its window."""
+    hs = HealthScorer(window=5, min_peers=3)
+    for _ in range(5):
+        for i in range(5):
+            hs.observe_wall(f"n{i}", 0.01)
+    hs.observe_wall("n0", 0.5)              # one bad sample
+    v = hs.evaluate()
+    assert v["n0"] == HEALTHY
+
+
+def test_scorer_needs_min_peers():
+    hs = HealthScorer(min_peers=3)
+    hs.observe_wall("a", 0.01)
+    hs.observe_wall("b", 5.0)               # huge, but only 2 nodes
+    v = hs.evaluate()
+    assert v["a"] == HEALTHY and v["b"] == HEALTHY
+
+
+def test_scorer_forget_drops_history_and_verdict():
+    hs = HealthScorer(window=4, min_peers=3)
+    for _ in range(4):
+        for i in range(3):
+            hs.observe_wall(f"n{i}", 0.01)
+        hs.observe_wall("slow", 0.5)
+    assert hs.evaluate()["slow"] == OUTLIER
+    hs.forget("slow")
+    assert "slow" not in hs.evaluate()
+    assert hs.verdict("slow") == HEALTHY    # unknown ids read healthy
+
+
+def test_scorer_parameter_validation():
+    with pytest.raises(ValueError):
+        HealthScorer(enter_z=3.0, exit_z=6.0)
+    with pytest.raises(ValueError):
+        HealthScorer(degraded_z=10.0, enter_z=6.0)
+    assert DEGRADED == "degraded"
+
+
+# ----------------------------------------------------------------------
+# flight recorder
+# ----------------------------------------------------------------------
+
+def test_flight_bundle_schema_and_cli(obs, tmp_path, capsys):
+    TRACER.finish(TRACER.start("w"))
+    REGISTRY.counter("c").inc(3)
+    REGISTRY.series_append("s", 1.0, 2.0)
+    path = str(tmp_path / "b.json")
+    out = flight.dump(path, reason="unit", foo="bar")
+    assert out == path
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["version"] == flight.BUNDLE_VERSION
+    assert doc["reason"] == "unit" and doc["attrs"] == {"foo": "bar"}
+    assert [s["name"] for s in doc["spans"]] == ["w"]
+    assert doc["metrics"]["c"] == 3
+    assert doc["series"]["s"] == [[1.0, 2.0]]
+    assert doc["registry"] is None          # no NodeRegistry attached
+    # the CLI writes the same bundle and reports its shape
+    assert flight.main(["dump", "-o", str(tmp_path / "cli.json")]) == 0
+    assert "1 spans" in capsys.readouterr().out
+    # ...and report --metrics renders a flight bundle directly
+    from repro.obs import report
+    assert report.main(["--metrics", path]) == 0
+    assert "== scalars ==" in capsys.readouterr().out
+
+
+def test_flight_trigger_disarmed_is_noop_and_armed_rate_limits(
+        obs, tmp_path):
+    rec = flight.FlightRecorder()
+    assert rec.trigger("node_death") is None          # disarmed: free
+    rec.arm(out_dir=str(tmp_path), min_interval_s=60.0)
+    REGISTRY.counter("after_arm").inc(2)
+    p1 = rec.trigger("node_death", node="n1")
+    assert p1 is not None and "node_death" in p1
+    with open(p1) as f:
+        doc = json.load(f)
+    assert doc["attrs"]["node"] == "n1"
+    assert doc["metrics_delta"]["after_arm"] == 2     # since-armed delta
+    assert rec.trigger("node_death", node="n2") is None   # rate-limited
+    rec.disarm()
+    assert rec.trigger("node_death") is None
+    assert rec.bundles == [p1]
+
+
+def test_flight_atomic_write_leaves_no_tmp(tmp_path):
+    path = str(tmp_path / "x.json")
+    flight._atomic_write_json(path, {"a": 1})
+    assert json.load(open(path)) == {"a": 1}
+    leftovers = [p for p in tmp_path.iterdir() if p.name.startswith(".")]
+    assert leftovers == []
+
+
+# ----------------------------------------------------------------------
+# status endpoint
+# ----------------------------------------------------------------------
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=5) as r:
+        body = r.read()
+        return r.status, r.headers.get("Content-Type", ""), body
+
+
+def test_statusd_routes(obs):
+    from repro.dist.registry import NodeRegistry
+    reg = NodeRegistry(heartbeat_timeout_s=60.0)
+    reg.register("n0")
+    reg.register("n1")
+    for _ in range(4):
+        for nid in ("n0", "n1", "n2"):
+            if nid != "n2":
+                reg.observe_shard(nid, 10, 0.1)
+    REGISTRY.series_append("llmr.wave_s", 1.0, 0.5)
+    srv = StatusServer(registry=reg,
+                       serve_stats=lambda: {"classes": {"batch": {
+                           "n": 4, "p50_ttft_s": 0.1, "p50_tpot_s": 0.01}},
+                           "slo_attainment": 0.9},
+                       slo_s=0.5).start()
+    try:
+        assert srv.running and srv.url.startswith("http://127.0.0.1:")
+        st, ct, body = _get(srv.url + "/healthz")
+        assert st == 200 and "json" in ct
+        hz = json.loads(body)
+        assert hz["ok"] and hz["metrics"]
+
+        st, _, body = _get(srv.url + "/fleet")
+        fleet = json.loads(body)
+        assert set(fleet["nodes"]) == {"n0", "n1"}
+        n0 = fleet["nodes"]["n0"]
+        assert n0["state"] == "alive"
+        assert n0["health"]["verdict"] == "healthy"
+
+        st, _, body = _get(srv.url + "/slo")
+        slo = json.loads(body)
+        assert slo["classes"]["batch"]["n"] == 4
+        assert slo["slo_attainment"] == 0.9
+        assert slo["target_first_result_s"] == 0.5
+
+        st, _, body = _get(srv.url + "/series")
+        assert "llmr.wave_s" in json.loads(body)["names"]
+        st, _, body = _get(srv.url + "/series?name=llmr.wave_s&n=10")
+        assert json.loads(body)["points"] == [[1.0, 0.5]]
+
+        st, ct, body = _get(srv.url + "/")
+        assert st == 200 and "html" in ct
+        assert b"fleet status" in body and b"/fleet" in body
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/nope")
+        assert ei.value.code == 404
+    finally:
+        srv.stop()
+    assert not srv.running
+
+
+def test_statusd_slo_fallback_reads_serve_histograms(obs):
+    REGISTRY.histogram("serve.ttft_s").observe(0.2)
+    REGISTRY.histogram("serve.ttft_s").observe(0.4)
+    srv = StatusServer().start()
+    try:
+        _, _, body = _get(srv.url + "/slo")
+        slo = json.loads(body)
+        assert slo["classes"]["all"]["n"] == 2
+        assert slo["classes"]["all"]["mean_ttft_s"] == pytest.approx(0.3)
+    finally:
+        srv.stop()
+
+
+# ----------------------------------------------------------------------
+# report --metrics
+# ----------------------------------------------------------------------
+
+def test_report_metrics_table(tmp_path, capsys):
+    from repro.obs import report
+    snap = {"pump.frames_out": 42, "busy": 0.25,
+            "exec_s": {"bounds": [0.1, 1.0], "counts": [3, 1, 0],
+                       "sum": 0.5, "count": 4}}
+    path = tmp_path / "m.json"
+    path.write_text(json.dumps(snap))
+    assert report.main(["--metrics", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "pump.frames_out" in out and "42" in out
+    assert "exec_s" in out and "== histograms ==" in out
+    # p50 lands in the first bucket (3 of 4 observations <= 0.1)
+    assert "0.1" in out
+    # no args at all is a usage error, not a crash
+    with pytest.raises(SystemExit):
+        report.main([])
+
+
+def test_report_metrics_quantiles():
+    from repro.obs.report import _bucket_quantile
+    h = {"bounds": [0.1, 1.0], "counts": [5, 4, 1], "count": 10}
+    assert _bucket_quantile(h, 0.5) == 0.1
+    assert _bucket_quantile(h, 0.9) == 1.0
+    assert _bucket_quantile(h, 1.0) is None        # overflow: unbounded
+    assert _bucket_quantile({"count": 0}, 0.5) is None
+
+
+# ----------------------------------------------------------------------
+# fabric integration: slow node -> outlier on the report
+# ----------------------------------------------------------------------
+
+def test_fleet_slow_node_flagged_outlier_on_report(obs, tmp_path):
+    cache = CompileCache(cache_dir=str(tmp_path / "aot"))
+    be = DistributedBackend(n_nodes=4, cache=cache, heartbeat_s=0.02,
+                            heartbeat_timeout_s=5.0, reweight=False)
+    try:
+        be.agents["node1"].throttle(0.02)   # ~20ms/shard vs ~instant
+        x = np.ones((64, 4), np.float32)
+        llmr = LLMapReduce(wave_size=16, backend=be)
+        rep = None
+        for _ in range(4):                  # a few waves of evidence
+            _, rep = llmr.map_reduce(app, x)
+        assert rep.health.get("node1") == OUTLIER
+        assert all(rep.health.get(f"node{i}") == HEALTHY
+                   for i in (0, 2, 3))
+        # the verdict also reads from the registry rollup
+        assert be.registry.rollup()["node1"]["health"] == OUTLIER
+    finally:
+        be.close()

@@ -120,6 +120,46 @@ def test_stats_dict_mirrors_increments_only_while_enabled(obs):
     assert REGISTRY.snapshot()["t.cache.hits"] == 3
 
 
+def test_retire_node_preserves_dead_incarnation_totals():
+    """A dead node's last cumulative snapshot folds into a baseline so
+    the fleet rollup keeps its work; a NEW incarnation under the same id
+    then adds on top instead of silently replacing (the rejoin
+    double-count / undercount fix)."""
+    reg = MetricsRegistry(enabled=True)
+    reg.ingest_node("n0", {"node.shards": 4}, incarnation="a")
+    reg.retire_node("n0")
+    assert reg.nodes_rollup()["node.shards"] == 4   # dead totals survive
+    reg.ingest_node("n0", {"node.shards": 2}, incarnation="b")
+    assert reg.nodes_rollup()["node.shards"] == 6   # 4 dead + 2 new
+    # retire is idempotent: a second call with no live snapshot is a no-op
+    reg.retire_node("n0")
+    reg.retire_node("n0")
+    assert reg.nodes_rollup()["node.shards"] == 6
+
+
+def test_zombie_same_incarnation_never_double_counts():
+    """A node condemned by a lease blip whose worker loop never actually
+    died keeps COUNTING CUMULATIVELY: when its beats resume with the
+    same incarnation nonce, the baseline fold is undone — its totals
+    must not be counted once in the baseline and again live."""
+    reg = MetricsRegistry(enabled=True)
+    reg.ingest_node("n0", {"node.shards": 4,
+                           "node.exec_s": {"bounds": [1.0],
+                                           "counts": [4, 0],
+                                           "sum": 0.4, "count": 4}},
+                    incarnation="a")
+    reg.retire_node("n0")                   # suspected dead (lease blip)
+    reg.ingest_node("n0", {"node.shards": 6,
+                           "node.exec_s": {"bounds": [1.0],
+                                           "counts": [6, 0],
+                                           "sum": 0.6, "count": 6}},
+                    incarnation="a")        # same loop, still counting
+    roll = reg.nodes_rollup()
+    assert roll["node.shards"] == 6         # not 4 + 6
+    assert roll["node.exec_s"]["count"] == 6
+    assert roll["node.exec_s"]["sum"] == pytest.approx(0.6)
+
+
 def test_node_ingest_latest_wins_and_rollup_sums():
     reg = MetricsRegistry(enabled=True)
     # node snapshots are CUMULATIVE: a newer snapshot replaces, the
@@ -228,6 +268,51 @@ def test_ring_is_bounded(obs):
         TRACER.enable(capacity=16384)
 
 
+def test_wrapped_ring_exports_no_orphan_parent_refs(obs):
+    """Overflow the ring so parents are evicted while their children
+    survive: the Chrome-trace export must not emit parent_id values
+    that point outside the document — the survivors become roots."""
+    TRACER.enable(capacity=8)
+    try:
+        root = TRACER.start("root", push=True)
+        for i in range(20):                  # push root out of the ring
+            TRACER.finish(TRACER.start(f"child{i}"))
+        TRACER.finish(root)
+        # drop the root span itself from the export set too
+        spans = [s for s in TRACER.spans() if s["name"] != "root"]
+        assert all(s.get("parent_id") for s in spans)  # links recorded...
+        doc = chrome_trace(spans)
+        ids = {e["args"]["span_id"] for e in doc["traceEvents"]
+               if e["ph"] == "X"}
+        for ev in doc["traceEvents"]:
+            if ev["ph"] != "X":
+                continue
+            pid = ev["args"].get("parent_id")
+            assert pid is None or pid in ids  # ...but never exported dangling
+        # the round trip treats the de-parented survivors as roots
+        roots, _ = span_tree(spans_from_chrome(doc))
+        assert len(roots) == len(spans)
+    finally:
+        TRACER.enable(capacity=16384)
+
+
+def test_report_renders_wrapped_ring_trace(obs, tmp_path):
+    """report.main on a wrapped-ring export: orphaned children render as
+    roots, no crash, exit 0."""
+    TRACER.enable(capacity=4)
+    try:
+        root = TRACER.start("root", push=True)
+        for i in range(12):
+            TRACER.finish(TRACER.start(f"leaf{i}"))
+        TRACER.finish(root)
+        path = str(tmp_path / "wrapped.json")
+        TRACER.export_json(path)
+    finally:
+        TRACER.enable(capacity=16384)
+    from repro.obs import report
+    assert report.main([path]) == 0
+
+
 # ----------------------------------------------------------------------
 # acceptance: one fleet wave, one exported tree, scheduler -> core
 # ----------------------------------------------------------------------
@@ -303,6 +388,62 @@ def test_fleet_wave_exports_linked_span_tree(obs, tmp_path):
 
     # the flame summary renders the whole tree without error
     assert "llmr.map_reduce" in flame_summary(spans)
+
+
+def test_rejoin_same_id_keeps_metrics_baseline(obs, tmp_path):
+    """Kill a node and rejoin it under the SAME id: the fleet rollup
+    must keep the dead incarnation's shard totals AND count the new
+    incarnation's on top — neither the pre-fix latest-wins undercount
+    nor a fold-twice double count."""
+    cache = CompileCache(cache_dir=str(tmp_path / "aot"))
+    be = DistributedBackend(n_nodes=2, cache=cache, heartbeat_s=0.02,
+                            heartbeat_timeout_s=0.5)
+    try:
+        x = np.ones((16, 4), np.float32)
+        be.launch(app, x, 16)
+        # wait until BOTH nodes' snapshots flew home with their shard
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            snaps = REGISTRY.node_snapshots()
+            if (snaps.get("node0", {}).get("node.shards", 0) >= 1
+                    and snaps.get("node1", {}).get("node.shards", 0) >= 1):
+                break
+            time.sleep(0.02)
+        before = REGISTRY.nodes_rollup().get("node.shards", 0)
+        assert before >= 2
+
+        be.agents["node1"].kill()           # hard death, lease expires
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            if be.registry.state("node1") == "dead":
+                break
+            time.sleep(0.01)
+        assert be.registry.state("node1") == "dead"
+        # the dead incarnation's totals survived condemnation
+        assert REGISTRY.nodes_rollup().get("node.shards", 0) == before
+
+        # rejoin under the same id (a restarted worker on the same host)
+        from repro.dist.node import NodeAgent
+        fresh = NodeAgent("node1", be.registry, cache=cache,
+                          transport=be.transport, heartbeat_s=0.02)
+        be.add_node(fresh)
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            if be.registry.state("node1") == "alive":
+                break
+            time.sleep(0.01)
+        assert be.registry.state("node1") == "alive"
+
+        be.launch(app, x, 16)
+        want = before + 2                   # wave 2: one shard per node
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            if REGISTRY.nodes_rollup().get("node.shards", 0) >= want:
+                break
+            time.sleep(0.02)
+        assert REGISTRY.nodes_rollup().get("node.shards", 0) == want
+    finally:
+        be.close()
 
 
 def test_observability_off_adds_no_spans_or_metrics(tmp_path):
