@@ -451,6 +451,338 @@ def bench_fig_serve():
     return rows
 
 
+def bench_fig_serve_kernel():
+    """fig_serve_kernel: in-kernel paged attention vs the gather path.
+
+    (a) token equality (HARD GATE): one request trace through the dense
+        fixed-partition engine, the paged gather engine, and the paged
+        ``kernel="pallas"`` engine — all three token streams must be
+        identical. The two paged paths reduce the softmax in different
+        orders, so logits agree only to ~1 bf16 ulp and greedy argmax is
+        deterministic on bounded horizons — which is why the trace here
+        generates few tokens per request (EXPERIMENTS.md fig_serve_kernel
+        spells out the contract);
+    (b) decode throughput at >= 75% pool occupancy: raw
+        ``paged_decode_step`` wall clock over a fragmented pool, kernel
+        vs gather. On a real TPU the kernel must clear 1.2x (HARD GATE);
+        off-TPU it runs in Pallas interpret mode — a correctness vehicle,
+        orders of magnitude slower — so the ratio is reported but exempt;
+    (c) bytes the kernel never materializes: the gather path builds a
+        dense (slots, vcap) KV view every decode step, the kernel walks
+        pages in place. ``serve.kernel.bytes_avoided`` counts the
+        difference; the metrics snapshot is written next to the trace
+        for ``python -m repro.obs.report --metrics``.
+    """
+    from repro.configs import get_config
+    from repro.core.backend import ArrayBackend
+    from repro.core.compile_cache import CompileCache
+    from repro.kernels.ops import on_tpu
+    from repro.models.lm import lm_init, paged_cache_init, paged_decode_step
+    from repro.obs import (REGISTRY, TRACER, disable_observability,
+                           enable_observability)
+    from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+
+    cache = CompileCache(cache_dir=tempfile.mkdtemp(prefix="repro-aot-"))
+    backend = ArrayBackend(cache=cache)
+    cfg = get_config("qwen3-14b", smoke=True)
+    params = jax.block_until_ready(lm_init(jax.random.PRNGKey(0), cfg))
+    tpu = on_tpu()
+    slots, page, pps = 4, 8, 8
+    R = 6 if _QUICK else 10
+    gen = 5                               # bounded equality horizon
+
+    def trace():
+        rng = np.random.default_rng(7)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            size=int(rng.choice([8, 12, 16]))),
+                        max_new=gen)
+                for i in range(R)]
+
+    disable_observability()
+    REGISTRY.clear()
+    TRACER.clear()
+    enable_observability()
+    try:
+        # -- (a) three-way token equality --------------------------------
+        outs, engines = {}, {}
+        for name, mk in (
+                ("dense", lambda: ServeEngine(
+                    cfg, params, slots=slots, capacity=page * pps,
+                    backend=backend)),
+                ("gather", lambda: PagedServeEngine(
+                    cfg, params, slots=slots, page_size=page,
+                    pages_per_slot=pps, backend=backend, kernel="gather")),
+                ("pallas", lambda: PagedServeEngine(
+                    cfg, params, slots=slots, page_size=page,
+                    pages_per_slot=pps, backend=backend, kernel="pallas"))):
+            t = trace()
+            eng = mk()
+            with TRACER.span(f"serve.kernel.{name}",
+                             attrs={"requests": R, "gen": gen}):
+                eng.run(t, max_steps=3000)
+            assert all(r.done for r in t)
+            outs[name] = [r.out for r in t]
+            engines[name] = eng
+        identical = (outs["dense"] == outs["gather"] == outs["pallas"])
+        rows = [("fig_serve_kernel_identical", float(identical),
+                 f"dense==gather=={outs['dense'] == outs['gather']} "
+                 f"gather==pallas=={outs['gather'] == outs['pallas']} "
+                 f"R={R} gen={gen}")]
+        if not identical:
+            raise RuntimeError(
+                "fig_serve_kernel: token streams diverged across "
+                "dense/gather/pallas engines on the acceptance trace")
+
+        # -- (b) decode throughput at >= 75% occupancy --------------------
+        P = slots * pps
+        filled = 6                        # 4 slots * 6 pages = 24/32 = 75%
+        occ = slots * filled / P
+        assert occ >= 0.75, occ
+        rng = np.random.default_rng(3)
+        perm = rng.permutation(P)
+        tbl = np.full((slots, pps), -1, np.int32)
+        for b in range(slots):
+            tbl[b, :filled] = perm[b * filled:(b + 1) * filled]
+        tbl = jnp.asarray(tbl)
+        pool0 = paged_cache_init(cfg, slots, P, page)
+        tok = jnp.ones((slots, 1), jnp.int32)
+        pos = jnp.full((slots, 1), filled * page - 1, jnp.int32)
+        reps = 3 if _QUICK else 5
+        iters = 20 if tpu else 3          # interpret mode: just a taste
+        walls = {}
+        for kern in ("gather", "pallas"):
+            lg, _ = paged_decode_step(params, pool0, tbl, tok, pos, cfg,
+                                      kernel=kern)   # compile/trace warmup
+            jax.block_until_ready(lg)
+            w = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    lg, _ = paged_decode_step(params, pool0, tbl, tok, pos,
+                                              cfg, kernel=kern)
+                jax.block_until_ready(lg)
+                w.append((time.perf_counter() - t0) / iters)
+            walls[kern] = float(np.median(w))
+            rows.append((f"fig_serve_kernel_decode_{kern}_us",
+                         walls[kern] * 1e6,
+                         f"occupancy={occ:.2f} iters={iters} reps={reps}"))
+        speed = walls["gather"] / walls["pallas"]
+        rows.append(("fig_serve_kernel_decode_speedup", speed,
+                     f"gather/pallas={speed:.2f}x occupancy={occ:.2f} "
+                     + ("(gate: >= 1.2x)" if tpu else
+                        "(interpret mode off-TPU: equality-only, "
+                        "ratio exempt)")))
+        if tpu and speed < 1.2:
+            raise RuntimeError(
+                f"fig_serve_kernel: pallas decode only {speed:.2f}x over "
+                f"gather at {occ:.0%} occupancy (gate: >= 1.2x)")
+
+        # -- (c) dense-view bytes the kernel never built ------------------
+        avoided = engines["pallas"].stats["kv_bytes_avoided"]
+        if avoided <= 0:
+            raise RuntimeError("fig_serve_kernel: pallas engine reported "
+                               "zero kv_bytes_avoided — the kernel path "
+                               "did not run")
+        assert engines["gather"].stats["kv_bytes_avoided"] == 0
+        rows.append(("fig_serve_kernel_bytes_avoided", float(avoided),
+                     f"dense_view_bytes_not_materialized={avoided} "
+                     f"steps={engines['pallas'].stats['steps']}"))
+
+        snap = REGISTRY.snapshot()
+        disable_observability()
+        mpath = os.environ.get("REPRO_OBS_METRICS_OUT") or os.path.join(
+            tempfile.mkdtemp(prefix="repro-obs-"), "serve_kernel_metrics.json")
+        with open(mpath, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        tpath = os.environ.get("REPRO_OBS_TRACE_OUT") or os.path.join(
+            tempfile.mkdtemp(prefix="repro-obs-"), "serve_kernel_trace.json")
+        TRACER.export_json(tpath)
+        rows.append(("fig_serve_kernel_obs", float(len(TRACER.spans())),
+                     f"trace={tpath} metrics={mpath} "
+                     f"bytes_avoided_counter="
+                     f"{snap.get('serve.kernel.bytes_avoided', 0)}"))
+        return rows
+    finally:
+        disable_observability()
+        REGISTRY.clear()
+        TRACER.clear()
+
+
+def bench_fig_prefix():
+    """fig_prefix: copy-on-write prefix sharing — the warm-path gates.
+
+    (a) warm TTFT (HARD GATE): request B shares request A's whole prompt
+        as a prefix. A cold admission prefills the full prompt; a warm
+        admission maps the shared pages into B's table and prefills only
+        the private suffix, so warm TTFT must be <= 0.5x cold (prefix
+        512 tokens; --quick shrinks it);
+    (b) warm KV bytes (HARD GATE): the warm admission may write at most
+        the private suffix plus ONE boundary page of copy-on-write —
+        accounted as ``prefill_rows * kv_row_bytes + cow_pages * page *
+        kv_row_bytes`` against the suffix+page budget;
+    (c) refcount leaks (HARD GATE): a preemption-heavy mixed-priority
+        run over prefix-sharing requests must leave the pool clean —
+        ``PagePool.check()`` passes and dropping every pinned prefix
+        drains ``used_pages`` to exactly zero;
+    (d) ``serve.prefix.hits``/``misses`` counters (plus the derived
+        ``serve.prefix.hit_rate``) land in a metrics snapshot readable
+        by ``python -m repro.obs.report --metrics``.
+    """
+    from repro.configs import get_config
+    from repro.core.backend import ArrayBackend
+    from repro.core.compile_cache import CompileCache
+    from repro.models.lm import lm_init
+    from repro.obs import (REGISTRY, TRACER, disable_observability,
+                           enable_observability)
+    from repro.serve.engine import PagedServeEngine, Request
+
+    cache = CompileCache(cache_dir=tempfile.mkdtemp(prefix="repro-aot-"))
+    backend = ArrayBackend(cache=cache)
+    cfg = get_config("qwen3-14b", smoke=True)
+    params = jax.block_until_ready(lm_init(jax.random.PRNGKey(0), cfg))
+    prefix_len = 128 if _QUICK else 512
+    extra, gen = 7, 4
+    page = 8 if _QUICK else 16
+    pps = (prefix_len + extra + gen) // page + 2
+    reps = 3 if _QUICK else 5
+
+    rng = np.random.default_rng(11)
+    pref = rng.integers(1, cfg.vocab, prefix_len)
+    pB = np.concatenate([pref, rng.integers(1, cfg.vocab, extra)])
+
+    def mk():
+        return PagedServeEngine(cfg, params, slots=2, page_size=page,
+                                pages_per_slot=pps, backend=backend,
+                                kernel="gather", prefix_sharing=True)
+
+    disable_observability()
+    REGISTRY.clear()
+    TRACER.clear()
+    enable_observability()
+    try:
+        # warm every executable shape (cold prefill, warm suffix, decode)
+        e = mk()
+        e.run([Request(rid=0, prompt=pref.copy(), max_new=gen)])
+        e.run([Request(rid=1, prompt=pB.copy(), max_new=gen)])
+        assert e.stats["prefix_hits"] == 1, e.stats
+
+        # -- (a)+(b) cold vs warm TTFT and warm bytes ---------------------
+        colds, warms = [], []
+        row_bytes = None
+        for rep in range(reps):
+            eng = mk()
+            a = Request(rid=10 + 2 * rep, prompt=pref.copy(), max_new=gen)
+            with TRACER.span("serve.prefix.cold",
+                             attrs={"prompt": prefix_len}):
+                eng.run([a])
+            rows0 = eng.stats["prefill_rows"]
+            b = Request(rid=11 + 2 * rep, prompt=pB.copy(), max_new=gen)
+            with TRACER.span("serve.prefix.warm",
+                             attrs={"prompt": prefix_len + extra}):
+                eng.run([b])
+            assert eng.stats["prefix_hits"] == 1, eng.stats
+            colds.append(eng.records[0].ttft_s)
+            warms.append(eng.records[1].ttft_s)
+            row_bytes = eng.kv_row_bytes()
+            warm_bytes = (eng.stats["prefill_rows"] - rows0
+                          + eng.stats["cow_pages"] * page) * row_bytes
+            budget = (extra + page) * row_bytes   # suffix + 1 boundary page
+            if warm_bytes > budget:
+                raise RuntimeError(
+                    f"fig_prefix: warm admission wrote {warm_bytes} KV "
+                    f"bytes > suffix+boundary budget {budget}")
+        cold = float(np.median(colds))
+        warm = float(np.median(warms))
+        ratio = warm / max(cold, 1e-9)
+        rows = [
+            ("fig_prefix_cold_ttft_us", cold * 1e6,
+             f"prompt={prefix_len} reps={reps}"),
+            ("fig_prefix_warm_ttft_us", warm * 1e6,
+             f"prompt={prefix_len}+{extra} suffix_rows={extra}"),
+            ("fig_prefix_warm_over_cold", ratio,
+             f"warm/cold={ratio:.3f} (gate: <= 0.5)"),
+            ("fig_prefix_warm_bytes", float(warm_bytes),
+             f"budget={budget} row_bytes={row_bytes} "
+             f"cow_pages={eng.stats['cow_pages']}"),
+        ]
+        if ratio > 0.5:
+            raise RuntimeError(
+                f"fig_prefix: warm TTFT {warm * 1e3:.2f}ms is "
+                f"{ratio:.2f}x cold {cold * 1e3:.2f}ms (gate: <= 0.5x)")
+
+        # -- (c) preemption-heavy refcount-leak gate ----------------------
+        eng = PagedServeEngine(cfg, params, slots=3, page_size=4,
+                               pages_per_slot=8, pool_pages=16,
+                               backend=backend, kernel="gather",
+                               prefix_sharing=True, prefix_min_tokens=4)
+        base = rng.integers(1, cfg.vocab, 11)      # unaligned: COW boundary
+        # phase 1: the seed request registers the bare base prompt.
+        # phase 2: long-generation batch fillers (all extensions of the
+        # base) warm-admit onto the pinned pages and keep decoding.
+        # phase 3: interactive extensions arrive while the fillers hold
+        # every slot — strict priority preempts the batch SHARERS mid-
+        # flight, so their shared refcounts must unwind and re-share on
+        # the warm re-admission.
+        seed = Request(rid=100, prompt=base.copy(), max_new=4)
+        eng.run([seed], max_steps=4000)
+        fillers = [Request(rid=110 + i,
+                           prompt=np.concatenate(
+                               [base, rng.integers(1, cfg.vocab, 2 + i)]),
+                           max_new=12, priority="batch")
+                   for i in range(3)]
+        # admit the fillers and step a few times, leaving them mid-flight
+        eng.run(fillers, max_steps=eng.stats["steps"] + 4)
+        assert not any(r.done for r in fillers)
+        inter = [Request(rid=120 + i,
+                         prompt=np.concatenate(
+                             [base, rng.integers(1, cfg.vocab, 1 + i % 5)]),
+                         max_new=4)
+                 for i in range(5)]
+        with TRACER.span("serve.prefix.preempt", attrs={"requests": 9}):
+            eng.run(inter, max_steps=6000)
+        assert all(r.done for r in [seed] + fillers + inter)
+        assert eng.stats["prefix_hits"] > 0, eng.stats
+        assert eng.stats["preemptions"] > 0, eng.stats
+        eng.pool.check()                           # raises on corruption
+        pinned = len(eng.pool.prefix_keys())
+        for k in list(eng.pool.prefix_keys()):
+            eng.pool.drop_prefix(k)
+        eng.pool.check()
+        if eng.pool.used_pages != 0:
+            raise RuntimeError(
+                f"fig_prefix: {eng.pool.used_pages} pages leaked after "
+                f"a preemption-heavy run (refcount leak)")
+        rows.append(("fig_prefix_leak_check", 1.0,
+                     f"preemptions={eng.stats['preemptions']} "
+                     f"cow_pages={eng.stats['cow_pages']} "
+                     f"hits={eng.stats['prefix_hits']} "
+                     f"pinned_prefixes_dropped={pinned} leaked=0"))
+
+        # -- (d) metrics + trace export -----------------------------------
+        snap = REGISTRY.snapshot()
+        disable_observability()
+        h = snap.get("serve.prefix.hits", 0)
+        m = snap.get("serve.prefix.misses", 0)
+        if h + m > 0:
+            snap["serve.prefix.hit_rate"] = h / (h + m)
+        mpath = os.environ.get("REPRO_OBS_METRICS_OUT") or os.path.join(
+            tempfile.mkdtemp(prefix="repro-obs-"), "prefix_metrics.json")
+        with open(mpath, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        tpath = os.environ.get("REPRO_OBS_TRACE_OUT") or os.path.join(
+            tempfile.mkdtemp(prefix="repro-obs-"), "prefix_trace.json")
+        TRACER.export_json(tpath)
+        rows.append(("fig_prefix_hit_rate",
+                     float(snap.get("serve.prefix.hit_rate", 0.0)),
+                     f"hits={h} misses={m} trace={tpath} metrics={mpath}"))
+        return rows
+    finally:
+        disable_observability()
+        REGISTRY.clear()
+        TRACER.clear()
+
+
 def bench_fig_dist():
     """fig_dist: the distributed launch fabric (scheduler -> node level).
 
@@ -1498,6 +1830,8 @@ BENCHES = {
     "fig7_backends": bench_fig7_backend_rate,
     "fig_autoscale": bench_fig_autoscale,
     "fig_serve": bench_fig_serve,
+    "fig_serve_kernel": bench_fig_serve_kernel,
+    "fig_prefix": bench_fig_prefix,
     "fig_dist": bench_fig_dist,
     "fig_stage_dedup": bench_fig_stage_dedup,
     "fig_fleet": bench_fig_fleet,

@@ -1,0 +1,192 @@
+"""Paged attention Pallas TPU kernel: in-kernel page-table walk.
+
+The serving engine keeps KV state in one shared pool of fixed-size pages;
+each slot owns an ordered page list (its page table, -1 = unallocated).
+The XLA path materializes a dense per-slot view every step
+(``models.lm.paged_gather`` -> attention -> ``paged_scatter``), touching
+``slots x pages_per_slot x page_size`` rows whether or not they are
+allocated. This kernel never materializes that view: the page table rides
+in as a *scalar-prefetch* operand, so each key-block's BlockSpec index map
+reads ``tables[slot, j]`` and DMAs exactly that pool page into VMEM —
+block-indexed loads straight from the pool, online-softmax accumulation
+per page block, with dead pages (table entry -1), empty rows (pos -1),
+causality and sliding windows all neutralized in-kernel.
+
+One kernel serves decode (S == 1) and prefill (S up to the virtual
+capacity); the grid is (slots, kv_heads, q_blocks, pages_per_slot) with
+the page axis innermost so softmax statistics live in VMEM scratch across
+the walk (TPU grids execute the trailing axis sequentially).
+
+An optional second score component (``q2``/``k2``) supports MLA's
+weight-absorbed decode form — scores are ``q.k + q2.k2`` (= q_abs.ckv +
+q_rope.kr) against the compressed cache — without ever concatenating
+pool-resident leaves.
+
+CPU runs use ``interpret=True`` (numerics validated against
+``ref.paged_attention_ref``); real-TPU lowering shares the roofline
+caveats of ``flash_attention`` (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, *refs, scale: float, causal: bool, window, cap,
+            bq: int, ps: int, has_q2: bool):
+    if has_q2:
+        q_ref, k_ref, v_ref, kpos_ref, qpos_ref, q2_ref, k2_ref = refs[:7]
+        o_ref, m_sc, l_sc, acc_sc = refs[7:]
+    else:
+        q_ref, k_ref, v_ref, kpos_ref, qpos_ref = refs[:5]
+        o_ref, m_sc, l_sc, acc_sc = refs[5:]
+    b = pl.program_id(0)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    t = tbl_ref[b, j]
+
+    @pl.when(t >= 0)
+    def _block():
+        G = q_ref.shape[3]
+        q = q_ref[0, :, 0].astype(jnp.float32)               # (bq, G, Dk)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (ps, Dk)
+        s = jax.lax.dot_general(                             # (bq, G, ps)
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if has_q2:
+            q2 = q2_ref[0, :, 0].astype(jnp.float32)
+            k2 = k2_ref[0, :, 0].astype(jnp.float32)
+            s += jax.lax.dot_general(
+                q2, k2, (((2,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        s = s * scale
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        kp = kpos_ref[0]                                     # (ps,)
+        qp = qpos_ref[0]                                     # (bq,)
+        mask = (kp >= 0)[None, None, :]
+        if causal:
+            mask &= kp[None, None, :] <= qp[:, None, None]
+        if window is not None:
+            mask &= (qp[:, None, None] - kp[None, None, :]) < window
+        mask = jnp.broadcast_to(mask, (bq, G, ps))
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]                                   # (bq, G)
+        m_new = jnp.maximum(m_prev, s.max(axis=2))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_sc[...] = l_sc[...] * alpha + p.sum(axis=2)
+        m_sc[...] = m_new
+        v = v_ref[0, :, 0].astype(jnp.float32)               # (ps, Dv)
+        acc_sc[...] = acc_sc[...] * alpha[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = l_sc[...]
+        l = jnp.where(l > 0, l, 1.0)                         # dead slot -> 0
+        o_ref[0, :, 0] = (acc_sc[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k, v, kpos, tables, q_pos, *, q2=None, k2=None,
+                    scale=None, causal: bool = True, window=None,
+                    softcap=None, block_q: int = 128,
+                    interpret: bool = False):
+    """Attention over pool-resident KV via an in-kernel page-table walk.
+
+    q:      (B, S, H, Dk)   queries (decode: S == 1)
+    k:      (P, ps, K, Dk)  pooled keys   — P pages of ps rows, H % K == 0
+    v:      (P, ps, K, Dv)  pooled values
+    kpos:   (P, ps) int32   absolute position per pool row (-1 = empty)
+    tables: (B, npps) int32 page table per slot (-1 = unallocated)
+    q_pos:  (B, S) int32    absolute query positions (-1 = pad row)
+    q2/k2:  optional second score component (MLA absorbed form);
+            q2: (B, S, H, Dk2), k2: (P, ps, K, Dk2)
+
+    Returns (B, S, H, Dv) in v.dtype. A slot whose table is all -1 (or a
+    pad query row) gets exact zeros.
+    """
+    B, S, H, Dk = q.shape
+    P, ps, K, _ = k.shape
+    Dv = v.shape[-1]
+    assert H % K == 0, (H, K)
+    G = H // K
+    npps = tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dk + (q2.shape[-1] if q2 is not None else 0))
+
+    bq = min(block_q, S)
+    pad_q = (-S) % bq
+    q5 = q.reshape(B, S, K, G, Dk)
+    if pad_q:
+        q5 = jnp.pad(q5, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    nq = q5.shape[1] // bq
+    grid = (B, K, nq, npps)
+
+    def _page(b, h, i, j, tbl):
+        return jnp.maximum(tbl[b, j], 0)       # -1 clamps; masked in-kernel
+
+    in_specs = [
+        pl.BlockSpec((1, bq, 1, G, Dk),
+                     lambda b, h, i, j, tbl: (b, i, h, 0, 0)),
+        pl.BlockSpec((1, ps, 1, Dk),
+                     lambda b, h, i, j, tbl: (_page(b, h, i, j, tbl), 0, h, 0)),
+        pl.BlockSpec((1, ps, 1, Dv),
+                     lambda b, h, i, j, tbl: (_page(b, h, i, j, tbl), 0, h, 0)),
+        pl.BlockSpec((1, ps),
+                     lambda b, h, i, j, tbl: (_page(b, h, i, j, tbl), 0)),
+        pl.BlockSpec((1, bq), lambda b, h, i, j, tbl: (b, i)),
+    ]
+    args = [q5, k, v, kpos, q_pos]
+    if q2 is not None:
+        Dk2 = q2.shape[-1]
+        q25 = q2.reshape(B, S, K, G, Dk2)
+        if pad_q:
+            q25 = jnp.pad(q25,
+                          ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        in_specs += [
+            pl.BlockSpec((1, bq, 1, G, Dk2),
+                         lambda b, h, i, j, tbl: (b, i, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, Dk2),
+                         lambda b, h, i, j, tbl:
+                         (_page(b, h, i, j, tbl), 0, h, 0)),
+        ]
+        args += [q25, k2]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          cap=softcap, bq=bq, ps=ps,
+                          has_q2=q2 is not None),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bq, 1, G, Dv),
+                                   lambda b, h, i, j, tbl: (b, i, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, G), jnp.float32),
+                pltpu.VMEM((bq, G), jnp.float32),
+                pltpu.VMEM((bq, G, Dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nq * bq, K, G, Dv), v.dtype),
+        interpret=interpret,
+    )(tables, *args)
+    return out.reshape(B, nq * bq, H, Dv)[:, :S]

@@ -34,6 +34,56 @@ def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
                       ).astype(q.dtype)
 
 
+def paged_attention_ref(q, k, v, kpos, tables, q_pos, *, q2=None, k2=None,
+                        scale=None, causal=True, window=None, softcap=None):
+    """Dense oracle for ``paged_attention``: materialize each slot's page
+    list into a per-slot view (exactly ``models.lm.paged_gather`` for one
+    leaf), then run naive masked attention.
+
+    q: (B,S,H,Dk), k/v: (P,ps,K,Dk/Dv), kpos: (P,ps), tables: (B,npps),
+    q_pos: (B,S). Optional q2/k2 add a second score component (MLA
+    absorbed form). Returns (B,S,H,Dv) in v.dtype.
+    """
+    B, S, H, Dk = q.shape
+    P, ps, K, _ = k.shape
+    npps = tables.shape[1]
+    vcap = npps * ps
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dk + (q2.shape[-1] if q2 is not None else 0))
+
+    cl = jnp.maximum(tables, 0)
+    kd = jnp.take(k, cl, axis=0).reshape(B, vcap, K, -1)
+    vd = jnp.take(v, cl, axis=0).reshape(B, vcap, K, -1)
+    kp = jnp.take(kpos, cl, axis=0).reshape(B, vcap)
+    kp = jnp.where(jnp.repeat(tables >= 0, ps, axis=1), kp, -1)
+
+    if K != H:
+        kd = jnp.repeat(kd, H // K, axis=2)
+        vd = jnp.repeat(vd, H // K, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   kd.astype(jnp.float32))
+    if q2 is not None:
+        k2d = jnp.take(k2, cl, axis=0).reshape(B, vcap, K, -1)
+        if K != H:
+            k2d = jnp.repeat(k2d, H // K, axis=2)
+        s += jnp.einsum("bqhd,bshd->bhqs", q2.astype(jnp.float32),
+                        k2d.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (kp >= 0)[:, None, :]                              # (B,1,S)
+    if causal:
+        mask = mask & (kp[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        mask = mask & ((q_pos[:, :, None] - kp[:, None, :]) < window)
+    mask = mask[:, None]                                      # (B,1,Q,S)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhqs,bshd->bqhd", p,
+                      vd.astype(jnp.float32)).astype(v.dtype)
+
+
 def ssd_ref(x, dt, A, B, C):
     """Sequential SSM recurrence (the semantic ground truth for SSD).
 

@@ -240,6 +240,97 @@ def _ring_update(cache: dict, new: dict, positions: jax.Array) -> dict:
     )(cache[k], entries[k], slot) for k in cache})
 
 
+# ---------------------------------------------------------------------------
+# Paged leaf path (pool-resident caches; serve engine)
+# ---------------------------------------------------------------------------
+#
+# A paged cache leaf is the POOL's leaf for one scan repeat plus the slots'
+# page tables: {"k": (P, ps, K, D), "v": ..., "pos": (P, ps),
+# "table": (B, npps)} (MLA: ckv/kr instead of k/v; int8: + k_scale/v_scale).
+# Fresh rows are scattered straight into their pages (no dense intermediate)
+# and attention reads the pool through the table — either by materializing
+# this one leaf's dense view (cfg.paged_kernel == "gather", the XLA
+# baseline) or by walking the table inside the Pallas kernel ("pallas").
+# Row -> page mapping matches ``models.lm.paged_scatter``: virtual row
+# v = pos % vcap lives in page table[v // ps] at offset v % ps; a -1 table
+# entry (stalled/dead slot) or -1 position (pad row) drops the write via an
+# out-of-range page index.
+
+def _paged_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _paged_leaf_update(cache: dict, entries: dict,
+                       positions: jax.Array) -> dict:
+    """Scatter fresh (B,S) rows into the pool pages mapped by the table."""
+    table = cache["table"]                                    # (B, npps)
+    P, ps = cache["pos"].shape
+    vcap = table.shape[1] * ps
+    valid = positions >= 0
+    v = jnp.where(valid, positions % vcap, 0)
+    page = jnp.take_along_axis(table, v // ps, axis=1)        # (B, S)
+    off = v % ps
+    tgt = jnp.where(valid & (page >= 0), page, P)             # OOB drops
+    new = dict(cache)
+    for k, rows in entries.items():
+        new[k] = cache[k].at[tgt, off].set(rows.astype(cache[k].dtype),
+                                           mode="drop")
+    new["pos"] = cache["pos"].at[tgt, off].set(positions, mode="drop")
+    return new
+
+
+def _paged_leaf_gather(cache: dict):
+    """Dense per-slot view of ONE pool leaf: ({k: (B,vcap,...)}, kpos)."""
+    table = cache["table"]
+    ps = cache["pos"].shape[-1]
+    B, npps = table.shape
+    cl = jnp.maximum(table, 0)
+
+    def g(leaf):
+        d = jnp.take(leaf, cl, axis=0)            # (B, npps, ps, ...)
+        return d.reshape(B, npps * ps, *leaf.shape[2:])
+
+    dense = {k: g(v) for k, v in cache.items() if k not in ("table", "pos")}
+    kpos = jnp.where(jnp.repeat(table >= 0, ps, axis=1), g(cache["pos"]), -1)
+    return dense, kpos
+
+
+def _paged_gqa(params: dict, cache: dict, q, k, v, spec: AttentionSpec,
+               cfg: ModelConfig, positions: jax.Array):
+    """GQA over a paged leaf: scatter fresh rows, attend through the table.
+
+    int8-quantized leaves always take the gather impl (the kernel reads
+    raw pool leaves and does not dequantize in-kernel)."""
+    quant = "k_scale" in cache
+    if quant:
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        new_cache = _paged_leaf_update(
+            cache, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs},
+            positions)
+    else:
+        new_cache = _paged_leaf_update(cache, {"k": k, "v": v}, positions)
+    scale = 1.0 / (spec.head_dim ** 0.5)
+    if cfg.paged_kernel == "pallas" and not quant:
+        from repro.kernels.paged_attention import paged_attention
+        out = paged_attention(
+            q, new_cache["k"], new_cache["v"], new_cache["pos"],
+            new_cache["table"], positions, scale=scale, causal=spec.causal,
+            window=spec.window, softcap=spec.logit_softcap,
+            interpret=_paged_interpret())
+    else:
+        dense, kpos = _paged_leaf_gather(new_cache)
+        if quant:
+            kd = _kv_dequantize(dense["k"], dense["k_scale"])
+            vd = _kv_dequantize(dense["v"], dense["v_scale"])
+        else:
+            kd, vd = dense["k"], dense["v"]
+        out = attn_core(q, kd, vd, positions, kpos, scale=scale,
+                        causal=spec.causal, window=spec.window,
+                        cap=spec.logit_softcap, n_kv=kd.shape[2])
+    return out, new_cache
+
+
 def gqa_apply(params: dict, x: jax.Array, spec: AttentionSpec,
               cfg: ModelConfig, positions: jax.Array,
               cache: Optional[dict] = None,
@@ -271,6 +362,14 @@ def gqa_apply(params: dict, x: jax.Array, spec: AttentionSpec,
             q = apply_rope(q, positions, spec.rope_theta, spec.rope_pct)
             k = apply_rope(k, positions, spec.rope_theta, spec.rope_pct)
         causal, window = spec.causal, spec.window
+
+        if cache is not None and "table" in cache:   # paged pool leaf
+            out, new_cache = _paged_gqa(params, cache, q, k, v, spec, cfg,
+                                        positions)
+            y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+            if "bo" in params:
+                y = y + params["bo"]
+            return y, new_cache
 
         if cache is not None:
             if "k_scale" in cache:             # int8 KV cache
@@ -392,6 +491,34 @@ def mla_apply(params: dict, x: jax.Array, spec: AttentionSpec,
 
     q_nope, q_rope = _mla_queries(params, x, spec, positions)
     ckv, kr = _mla_compress(params, x, spec, positions)
+
+    if cache is not None and "table" in cache:   # paged pool leaf
+        # weight-absorbed form for ANY S: MQA against the compressed pool
+        # (exact — scores q_abs.ckv + q_rope.kr, values ckv @ W_uv), so a
+        # warm-prefix suffix prefill attends shared pages directly
+        new_cache = _paged_leaf_update(cache, {"ckv": ckv, "kr": kr},
+                                       positions)
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+        if cfg.paged_kernel == "pallas":
+            from repro.kernels.paged_attention import paged_attention
+            ckv_p = new_cache["ckv"][:, :, None, :]
+            ctx = paged_attention(
+                q_abs, ckv_p.astype(q_abs.dtype), ckv_p.astype(q_abs.dtype),
+                new_cache["pos"], new_cache["table"], positions,
+                q2=q_rope, k2=new_cache["kr"][:, :, None, :].astype(
+                    q_abs.dtype),
+                scale=scale, causal=True, interpret=_paged_interpret())
+        else:
+            dense, k_pos = _paged_leaf_gather(new_cache)
+            q_cat = jnp.concatenate([q_abs, q_rope], axis=-1)
+            k_cat = jnp.concatenate([dense["ckv"], dense["kr"]], axis=-1)
+            ctx = attn_core(q_cat, k_cat[:, :, None, :].astype(q_cat.dtype),
+                            dense["ckv"][:, :, None, :].astype(q_cat.dtype),
+                            positions, k_pos, scale=scale, causal=True,
+                            window=None, cap=None, n_kv=1)
+        out = jnp.einsum("bshr,rhv->bshv", ctx, params["w_uv"])
+        y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+        return y, new_cache
 
     if cache is not None and S == 1:
         # ---- decode: weight-absorbed form == MQA over the compressed cache

@@ -456,43 +456,161 @@ def paged_clear(pool: list, page_ids) -> list:
     return _map_attn_subs(pool, attn_fn)
 
 
+def paged_copy(pool: list, src, dst) -> list:
+    """Copy page payloads ``src`` -> ``dst`` on every attention leaf (the
+    copy-on-write break: a shared page is duplicated into a private page
+    before its first divergent write). src/dst: int32 page ids, scalar or
+    (n,); out-of-range dst drops (used to no-op padded id lists)."""
+    s = jnp.asarray(src, jnp.int32)
+    d = jnp.asarray(dst, jnp.int32)
+
+    def attn_fn(sub):
+        return {k: leaf.at[:, d].set(jnp.take(leaf, s, axis=1), mode="drop")
+                for k, leaf in sub.items()}
+
+    return _map_attn_subs(pool, attn_fn)
+
+
+def _paged_view(pool: list, tables: jax.Array, cfg: ModelConfig,
+                fresh_ssm: Optional[int] = None) -> list:
+    """Cache pytree for the leaf-level paged path: every attention leaf
+    carries the pool pages plus ``table`` (broadcast over scan repeats so
+    it rides the ``lax.scan`` xs axis); SSM leaves pass through slot-dense
+    (decode) or are replaced with fresh zero state for a ``fresh_ssm``-row
+    prefill batch (scattered to slots by the caller afterwards)."""
+    out = []
+    for g, gtree in zip(cfg.groups, pool):
+        ng = {}
+        for bi, btree in gtree.items():
+            nb = {}
+            for kind, sub in btree.items():
+                if kind == "attn":
+                    sub = dict(sub)
+                    R = sub["pos"].shape[0]
+                    sub["table"] = jnp.broadcast_to(
+                        tables[None], (R,) + tables.shape)
+                    nb[kind] = sub
+                elif fresh_ssm is not None:
+                    init = ssm_cache_init(fresh_ssm, cfg.d_model,
+                                          g.pattern[int(bi)].ssm)
+                    R = next(iter(sub.values())).shape[0]
+                    nb[kind] = jax.tree_util.tree_map(
+                        lambda a: jnp.broadcast_to(a[None], (R,) + a.shape),
+                        init)
+                else:
+                    nb[kind] = sub
+            ng[bi] = nb
+        out.append(ng)
+    return out
+
+
+def _paged_unview(caches: list) -> list:
+    """Strip the ``table`` entries a ``_paged_view`` forward echoes back."""
+    def attn_fn(sub):
+        return {k: v for k, v in sub.items() if k != "table"}
+    return _map_attn_subs(caches, attn_fn)
+
+
 def paged_prefill(params: dict, pool: list, tables: jax.Array,
                   tokens: jax.Array, lengths: jax.Array,
                   slot_ids: jax.Array, cfg: ModelConfig,
-                  enc_out: Optional[jax.Array] = None):
+                  enc_out: Optional[jax.Array] = None, *,
+                  starts: Optional[jax.Array] = None,
+                  kernel: str = "gather"):
     """Batched multi-slot prefill straight into the page pool.
 
     tokens: (B, S) right-padded prompts; lengths: (B,) real lengths;
     tables: (B, pages_per_slot) page tables of the destination slots;
     slot_ids: (B,) destination slots for the SSM state (out-of-range =
-    dummy row, dropped). Returns (last-real-token logits (B,1,V), pool)."""
-    ps = pool_page_size(pool)
-    vcap = tables.shape[1] * ps if ps else None
-    logits, dense = prefill_batched(params, {"tokens": tokens}, cfg, lengths,
-                                    enc_out=enc_out, capacity=vcap)
-    S = tokens.shape[1]
-    claim = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
-                             tokens.shape)
-    return logits, paged_scatter(pool, dense, tables, claim,
-                                 slot_ids=slot_ids)
+    dummy row, dropped). Returns (last-real-token logits (B,1,V), pool).
+
+    ``kernel`` selects the attention data path: "gather" (cold prompts)
+    keeps the dense-materialize path (``prefill_batched`` + whole-tree
+    ``paged_scatter`` — the bitwise-stable baseline); "pallas" — or any
+    call with ``starts`` — runs the leaf-level paged path: fresh rows are
+    scattered page-by-page inside each layer and queries attend the pool
+    THROUGH the page table, so row b may continue from absolute position
+    ``starts[b]`` with its earlier pages (e.g. a shared prefix) already
+    resident. tokens then holds only the suffix and lengths its length."""
+    if kernel == "gather" and starts is None:
+        ps = pool_page_size(pool)
+        vcap = tables.shape[1] * ps if ps else None
+        logits, dense = prefill_batched(params, {"tokens": tokens}, cfg,
+                                        lengths, enc_out=enc_out,
+                                        capacity=vcap)
+        S = tokens.shape[1]
+        claim = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 tokens.shape)
+        return logits, paged_scatter(pool, dense, tables, claim,
+                                     slot_ids=slot_ids)
+
+    B, S = tokens.shape
+    st = (jnp.zeros((B,), jnp.int32) if starts is None
+          else starts.astype(jnp.int32))
+    positions = st[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    positions = jnp.where(
+        jnp.arange(S, dtype=jnp.int32)[None] < lengths.astype(jnp.int32)[:, None],
+        positions, -1)                                 # pad rows never write
+    view = _paged_view(pool, tables, cfg.replace(paged_kernel=kernel),
+                       fresh_ssm=B)
+    h, new_caches, _ = lm_hidden(params, {"tokens": tokens,
+                                          "positions": positions},
+                                 cfg.replace(paged_kernel=kernel),
+                                 caches=view, enc_out=enc_out)
+    idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, S - 1)
+    last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = lm_logits(params, last, cfg)
+
+    def ssm_fn(new_sub, old_sub):
+        return {k: old_sub[k].at[:, slot_ids].set(
+            new_sub[k].astype(old_sub[k].dtype), mode="drop")
+            for k in old_sub}
+
+    return logits, _zip_attn_subs(_paged_unview(new_caches), pool,
+                                  lambda n, o: n, ssm_fn)
 
 
 def paged_decode_step(params: dict, pool: list, tables: jax.Array,
                       tokens: jax.Array, pos: jax.Array, cfg: ModelConfig,
                       enc_out: Optional[jax.Array] = None,
-                      live: Optional[jax.Array] = None):
-    """One batched decode step over the paged pool: gather each slot's
-    pages into the dense view, run the ordinary ``decode_step``, scatter
-    the one new row per slot back to its page. tokens/pos: (B, 1).
+                      live: Optional[jax.Array] = None, *,
+                      kernel: str = "gather"):
+    """One batched decode step over the paged pool. tokens/pos: (B, 1).
+
+    kernel="gather": materialize each slot's dense view (``paged_gather``),
+    run the ordinary ``decode_step``, scatter the one new row per slot back
+    to its page — the bitwise-stable baseline. kernel="pallas": no dense
+    view is ever built — each attention leaf scatters its one fresh row
+    into the pool and the Pallas kernel walks the page table in-kernel
+    (``kernels.paged_attention``).
 
     ``live`` (B,) bool marks slots whose state may advance; a stalled
     (page-less) slot's attention write already drops on the missing page,
     and ``live=False`` drops its SSM-state write too, so the step can be
     retried bit-identically once a page frees."""
-    dense = paged_gather(pool, tables)
-    logits, new_dense = decode_step(params, dense, tokens, pos, cfg,
-                                    enc_out=enc_out)
-    return logits, paged_scatter(pool, new_dense, tables, pos, live=live)
+    if kernel == "gather":
+        dense = paged_gather(pool, tables)
+        logits, new_dense = decode_step(params, dense, tokens, pos, cfg,
+                                        enc_out=enc_out)
+        return logits, paged_scatter(pool, new_dense, tables, pos, live=live)
+
+    view = _paged_view(pool, tables, cfg)
+    h, new_caches, _ = lm_hidden(params, {"tokens": tokens,
+                                          "positions": pos},
+                                 cfg.replace(paged_kernel=kernel),
+                                 caches=view, enc_out=enc_out)
+    logits = lm_logits(params, h, cfg)
+
+    def ssm_fn(new_sub, old_sub):
+        if live is None:
+            return new_sub
+        return {k: jnp.where(
+            live.reshape((1, -1) + (1,) * (old_sub[k].ndim - 2)),
+            new_sub[k].astype(old_sub[k].dtype), old_sub[k])
+            for k in old_sub}
+
+    return logits, _zip_attn_subs(_paged_unview(new_caches), pool,
+                                  lambda n, o: n, ssm_fn)
 
 
 # ---------------------------------------------------------------------------

@@ -141,6 +141,12 @@ class ModelConfig:
     encoder: Optional[EncoderSpec] = None
     frontend: Optional[str] = None    # None | "vlm_patch" | "audio_frames"
     frontend_len: int = 0             # frontend embedding length (stubbed)
+    # Paged-serving attention impl for pool-resident caches ("table" in the
+    # cache leaf): "gather" materializes the slot's dense view per leaf via
+    # XLA takes; "pallas" walks the page table inside
+    # ``kernels.paged_attention`` (interpret-mode off-TPU). Static — the
+    # serve engine bakes it into each executable via ``cfg.replace``.
+    paged_kernel: str = "gather"
 
     @property
     def n_layers(self) -> int:

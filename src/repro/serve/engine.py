@@ -17,6 +17,33 @@ Two engines share one driver (``_EngineBase.run``: admit -> grow -> step):
                      request requeued) when interactive work needs the
                      pool or the slots.
 
+The paged engine additionally owns two optimizations this module only
+orchestrates (the mechanisms live in ``kv_pool`` and ``models.lm``):
+
+* ``kernel=`` selects the compiled attention data path. ``"gather"``
+  materializes each slot's dense KV view per step (XLA gathers — the
+  bitwise-stable baseline); ``"pallas"`` walks the page table inside
+  ``kernels.paged_attention`` so the dense view is never built;
+  ``"auto"`` picks pallas on TPU, gather elsewhere (interpret-mode
+  Pallas is correct but slow). The choice is baked into every decode /
+  prefill executable (it is part of the AOT cache key), never branched
+  at runtime.
+* prefix sharing (copy-on-write). After a prompt prefills, its pages
+  are REGISTERED under a digest of the prompt tokens, which pins them
+  in the pool past the request's lifetime. A later prompt that starts
+  with a registered prefix is admitted WARM: it maps the pinned pages
+  into its own table (refcount++, zero KV written) and prefills only
+  its suffix, continuing from the divergence point — TTFT approaches a
+  single decode step for a fully-warm prompt. Shared pages are
+  immutable: any write landing in one — the suffix's first page when
+  divergence is mid-page, or the original owner decoding past a
+  registered boundary — first breaks the page out via
+  ``PagePool.cow_page`` + ``models.lm.paged_copy`` (one page copy),
+  so readers of the pinned prefix never observe another request's
+  tokens. Pinned prefixes are evicted LRU under allocation pressure
+  (cheaper than preempting live work), and a page is cleared + reused
+  only when its LAST reference (tables and registry both) drops.
+
 Both engines guard KV overflow at admission: a prompt that cannot fit is
 rejected outright, and a generation budget is clamped so decode can never
 silently wrap the ring past live history (``finish_reason="capacity"``).
@@ -28,6 +55,7 @@ without paying trace+compile again, and vice versa.
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -38,11 +66,12 @@ import numpy as np
 
 from repro.core.backend import ArrayBackend
 from repro.core.telemetry import RequestRecord, class_summary, slo_attainment
+from repro.kernels.ops import on_tpu
 from repro.obs import flight as _flight
 from repro.obs import metrics as _obs
 from repro.models.lm import (cache_init, decode_step, paged_cache_init,
-                             paged_clear, paged_decode_step, paged_prefill,
-                             prefill)
+                             paged_clear, paged_copy, paged_decode_step,
+                             paged_prefill, prefill)
 from repro.models.spec import ModelConfig
 from repro.serve.kv_pool import PagePool
 from repro.serve.scheduler import AdmissionScheduler, bucket_len
@@ -336,9 +365,15 @@ class PagedServeEngine(_EngineBase):
       request larger than the entire pool is finished early
       (``finish_reason="pool_exhausted"``).
 
-    Token output is bit-identical to ``ServeEngine`` on the same trace
-    (same prompts, same admission shapes): the compiled step gathers each
-    slot's pages into exactly the dense view ``decode_step`` always ran on.
+    Token output with ``kernel="gather"`` is bit-identical to
+    ``ServeEngine`` on the same trace (same prompts, same admission
+    shapes): the compiled step gathers each slot's pages into exactly the
+    dense view ``decode_step`` always ran on. ``kernel="pallas"`` keeps
+    the same math (online softmax over the same masked rows) without ever
+    materializing that view — greedy tokens match the gather path on
+    bounded horizons and logits agree to the last bf16 bit (the two paths
+    reduce in different orders, so 1-ulp wobble is the contract, not
+    bitwise float equality; see EXPERIMENTS.md fig_serve_kernel).
     """
 
     def __init__(self, cfg: ModelConfig, params, slots: int = 8,
@@ -346,7 +381,10 @@ class PagedServeEngine(_EngineBase):
                  pool_pages: Optional[int] = None,
                  backend: Optional[ArrayBackend] = None,
                  scheduler: Optional[AdmissionScheduler] = None,
-                 batched_prefill: bool = True):
+                 batched_prefill: bool = True,
+                 kernel: str = "auto",
+                 prefix_sharing: bool = False,
+                 prefix_min_tokens: Optional[int] = None):
         super().__init__(cfg, params, slots, backend, scheduler)
         if pool_pages is None:
             pool_pages = slots * pages_per_slot
@@ -355,24 +393,63 @@ class PagedServeEngine(_EngineBase):
         self.tables = jnp.asarray(self.pool.table_array())
         self._tables_dirty = False
         self.batched_prefill = batched_prefill
+        if kernel == "auto":
+            kernel = "pallas" if on_tpu() else "gather"
+        if kernel not in ("gather", "pallas"):
+            raise ValueError(f"kernel must be gather|pallas|auto: {kernel!r}")
+        self.kernel = kernel
         # right-padded batched prefill is unsound for SSM state (the
         # recurrence would absorb pad tokens): group by exact length then
         self._pad_safe = not any(b.ssm is not None
                                  for g in cfg.groups for b in g.pattern)
+        # prefix sharing caches attention pages only; an SSM config's
+        # recurrent state at the divergence point is NOT in the pool, so a
+        # warm continuation would decode from a wrong (zero) state
+        self._prefix_ok = prefix_sharing and self._pad_safe
+        self.prefix_min_tokens = (page_size if prefix_min_tokens is None
+                                  else prefix_min_tokens)
         self._admit_order = 0                  # preemption recency clock
         self._admit_seq: List[int] = [0] * slots
+        self._dense_view_bytes, self._kv_row_bytes = self._kv_geometry()
 
         def step_fn(p, kv, tables, t, po, live):
-            return paged_decode_step(p, kv, tables, t, po, cfg, live=live)
+            return paged_decode_step(p, kv, tables, t, po, cfg, live=live,
+                                     kernel=kernel)
 
         self._live = jnp.ones((slots,), bool)
         self._step, src = self.backend.compile(
             step_fn, (params, self.kv, self.tables, self.tokens, self.pos,
                       self._live),
             extras=("serve-paged-step", cfg.name, slots, pool_pages,
-                    page_size, pages_per_slot))
+                    page_size, pages_per_slot, kernel))
         self.stats["compile_sources"]["step"] = src
         self._prefill_by_shape: dict = {}      # (B, S) -> AOT executable
+        self._warm_by_len: dict = {}           # S_pad  -> AOT executable
+        self.stats.update({"prefix_hits": 0, "prefix_misses": 0,
+                           "prefix_registered": 0, "cow_pages": 0,
+                           "prefill_rows": 0, "kv_bytes_avoided": 0})
+        self._m_phit = _obs.counter("serve.prefix.hits")
+        self._m_pmiss = _obs.counter("serve.prefix.misses")
+        self._m_bytes = _obs.counter("serve.kernel.bytes_avoided")
+
+    def _kv_geometry(self) -> Tuple[int, int]:
+        """(bytes of dense per-slot views the gather path materializes per
+        decode step, bytes one KV cache row costs across all layers)."""
+        dense = row = 0
+        vcap = self.pool.vcap
+        for gtree in self.kv:
+            for btree in gtree.values():
+                sub = btree.get("attn")
+                if not sub:
+                    continue
+                for name, leaf in sub.items():
+                    R = leaf.shape[0]
+                    tail = int(np.prod(leaf.shape[3:])) if leaf.ndim > 3 else 1
+                    item = np.dtype(leaf.dtype).itemsize
+                    dense += R * self.slots * vcap * tail * item
+                    if name != "pos":
+                        row += R * tail * item
+        return dense, row
 
     def _request_capacity(self) -> int:
         return self.pool.vcap
@@ -381,10 +458,11 @@ class PagedServeEngine(_EngineBase):
     def _prefill_exec(self, B: int, S: int):
         compiled = self._prefill_by_shape.get((B, S))
         if compiled is None:
-            cfg = self.cfg
+            cfg, kern = self.cfg, self.kernel
 
             def prefill_fn(p, kv, trows, toks, lens, sids):
-                return paged_prefill(p, kv, trows, toks, lens, sids, cfg)
+                return paged_prefill(p, kv, trows, toks, lens, sids, cfg,
+                                     kernel=kern)
 
             example = (self.params, self.kv,
                        jnp.zeros((B, self.pool.pages_per_slot), jnp.int32),
@@ -394,10 +472,86 @@ class PagedServeEngine(_EngineBase):
             compiled, src = self.backend.compile(
                 prefill_fn, example,
                 extras=("serve-paged-prefill", cfg.name, self.pool.n_pages,
-                        self.pool.page_size, self.pool.pages_per_slot))
+                        self.pool.page_size, self.pool.pages_per_slot, kern))
             self._prefill_by_shape[(B, S)] = compiled
             self.stats["compile_sources"][f"prefill_b{B}_s{S}"] = src
         return compiled
+
+    def _warm_exec(self, S: int):
+        """Suffix-continuation prefill (B=1): rows start at ``starts`` and
+        attend the slot's already-resident prefix pages through the table."""
+        compiled = self._warm_by_len.get(S)
+        if compiled is None:
+            cfg, kern = self.cfg, self.kernel
+
+            def warm_fn(p, kv, trows, toks, lens, sids, starts):
+                return paged_prefill(p, kv, trows, toks, lens, sids, cfg,
+                                     starts=starts, kernel=kern)
+
+            example = (self.params, self.kv,
+                       jnp.zeros((1, self.pool.pages_per_slot), jnp.int32),
+                       jnp.zeros((1, S), jnp.int32),
+                       jnp.zeros((1,), jnp.int32),
+                       jnp.zeros((1,), jnp.int32),
+                       jnp.zeros((1,), jnp.int32))
+            compiled, src = self.backend.compile(
+                warm_fn, example,
+                extras=("serve-paged-warm", cfg.name, self.pool.n_pages,
+                        self.pool.page_size, self.pool.pages_per_slot, kern))
+            self._warm_by_len[S] = compiled
+            self.stats["compile_sources"][f"warm_s{S}"] = src
+        return compiled
+
+    # -- prefix sharing ----------------------------------------------------
+    @staticmethod
+    def _digest(tokens) -> bytes:
+        return hashlib.sha1(
+            np.ascontiguousarray(tokens, np.int32).tobytes()).digest()
+
+    def _match_prefix(self, req: Request):
+        """Longest registered, token-verified prefix strictly shorter than
+        or equal to the prompt: returns (L, entry) or None. L == len(prompt)
+        still re-prefills the last token (logits need a forward pass)."""
+        if not self._prefix_ok:
+            return None
+        S = len(req.prompt)
+        for L in self.pool.prefix_lengths():
+            if L > S or L < self.prefix_min_tokens:
+                continue
+            e = self.pool.lookup_prefix(self._digest(req.prompt[:L]),
+                                        req.prompt)
+            if e is not None:
+                return L, e
+        return None
+
+    def _cow(self, slot: int, pg_idx: int, priority: str) -> bool:
+        """Break the shared page at ``slot``'s table index ``pg_idx`` out
+        into a private copy (pool bookkeeping + device-side page copy)."""
+        res = self.pool.cow_page(slot, pg_idx)
+        if res is None and self._ensure_pages(1, priority, exclude=slot):
+            res = self.pool.cow_page(slot, pg_idx)
+        if res is None:
+            return False
+        src, dst = res
+        self.kv = paged_copy(self.kv, src, dst)
+        self.stats["cow_pages"] += 1
+        self._tables_dirty = True
+        return True
+
+    def _register(self, slot: int, req: Request) -> None:
+        """Pin the pages holding ``req``'s full prompt under its digest.
+        The boundary page may later take the owner's decode writes — the
+        owner COWs it first (``_pre_step``), leaving the pinned snapshot
+        frozen."""
+        if not self._prefix_ok:
+            return
+        S = len(req.prompt)
+        if S < self.prefix_min_tokens:
+            return
+        pages = self.pool.pages_of(slot)[: self.pool.pages_for_tokens(S)]
+        if self.pool.register_prefix(self._digest(req.prompt),
+                                     req.prompt, pages):
+            self.stats["prefix_registered"] += 1
 
     # -- preemption --------------------------------------------------------
     def _preempt(self, i: int) -> None:
@@ -435,7 +589,13 @@ class PagedServeEngine(_EngineBase):
         by the scheduler's TTFT SLO (batch keeps its slots while the queue
         wait is comfortably inside the target); an already-RUNNING
         interactive request growing a page always may preempt — stalling
-        it would burn its TPOT for nothing."""
+        it would burn its TPOT for nothing. Before touching live work,
+        cold pinned prefixes are evicted LRU — cache, not computation, so
+        ANY priority may reclaim them."""
+        if self.pool.free_pages < need:
+            freed = self.pool.evict_prefixes(need)
+            if freed:
+                self.kv = paged_clear(self.kv, freed)
         while self.pool.free_pages < need:
             if priority != "interactive":
                 return False
@@ -486,6 +646,13 @@ class PagedServeEngine(_EngineBase):
         if not self.scheduler.has_pending():
             return 0
         head = self.scheduler.peek_next()
+        m = self._match_prefix(head)
+        if m is not None:
+            L, entry = m
+            if self._admit_warm(head, L, entry):
+                self.scheduler.pop_next()
+                return 1
+            # warm admission couldn't get pages/slot: fall through cold
         if not self._ensure_pages(
                 self.pool.pages_for_tokens(len(head.prompt)), head.priority,
                 admission=True):
@@ -518,6 +685,66 @@ class PagedServeEngine(_EngineBase):
             self._prefill_commit(placed)
         return len(placed)
 
+    def _admit_warm(self, req: Request, L: int, entry: dict) -> bool:
+        """Admit ``req`` onto a registered prefix: map the pinned pages
+        into a free slot (refcount++, zero KV written), claim private
+        pages for the suffix, COW the boundary page when the divergence
+        point is inside a shared page, then prefill ONLY the suffix
+        (continuing from absolute position ``suffix_start``). A fully-
+        cached prompt re-runs just its last token to produce logits."""
+        free = [i for i, a in enumerate(self.active) if a is None]
+        if not free:
+            return False
+        slot = free[0]
+        S = len(req.prompt)
+        shared = entry["pages"]
+        n_priv = self.pool.pages_for_tokens(S) - len(shared)
+        if not self.pool.share(slot, shared):
+            return False
+        ok = n_priv <= 0 or (
+            self._ensure_pages(n_priv, req.priority, admission=True)
+            and self.pool.alloc(slot, n_priv) is not None)
+        suffix_start = min(L, S - 1)
+        pg_w = suffix_start // self.pool.page_size
+        if ok and pg_w < len(shared):
+            ok = self._cow(slot, pg_w, req.priority)
+        if not ok:
+            freed = self.pool.free_slot(slot)   # undo the share
+            if freed:
+                self.kv = paged_clear(self.kv, freed)
+            return False
+        S_suf = S - suffix_start
+        S_pad = min(bucket_len(S_suf), self.pool.vcap)
+        toks = np.zeros((1, S_pad), np.int64)
+        toks[0, :S_suf] = req.prompt[suffix_start:]
+        trows = self.pool.table_array()[slot][None]
+        exe = self._warm_exec(S_pad)
+        logits, self.kv = exe(self.params, self.kv,
+                              jnp.asarray(trows, jnp.int32),
+                              jnp.asarray(toks, jnp.int32),
+                              jnp.asarray([S_suf], jnp.int32),
+                              jnp.asarray([slot], jnp.int32),
+                              jnp.asarray([suffix_start], jnp.int32))
+        self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_rows"] += S_suf
+        self.stats["prefix_hits"] += 1
+        if _obs.REGISTRY.enabled:
+            self._m_phit.inc()
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out.append(tok)
+        req.t_first = time.perf_counter()
+        self.tokens = self.tokens.at[slot, 0].set(tok)
+        self.pos = self.pos.at[slot, 0].set(S)
+        self.active[slot] = req
+        self._admit_order += 1
+        self._admit_seq[slot] = self._admit_order
+        self.stats["admitted"] += 1
+        self._tables_dirty = True
+        self._register(slot, req)  # a warm prompt seeds longer prefixes too
+        if len(req.out) >= req.budget:
+            self._finish(slot)
+        return True
+
     def _prefill_commit(self, placed: List[Tuple[int, Request]]) -> None:
         """One prefill dispatch for the whole group. In batched mode the
         executable has a fixed batch of ``slots`` rows — absent slots ride
@@ -547,6 +774,7 @@ class PagedServeEngine(_EngineBase):
                               jnp.asarray(lens, jnp.int32),
                               jnp.asarray(sids, jnp.int32))
         self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_rows"] += int(lens.sum())
         first = np.asarray(jnp.argmax(logits[:, -1], -1), np.int64)
         now = time.perf_counter()
         for r, (slot, req) in enumerate(placed):
@@ -559,6 +787,11 @@ class PagedServeEngine(_EngineBase):
             self._admit_order += 1
             self._admit_seq[slot] = self._admit_order
             self.stats["admitted"] += 1
+            if self._prefix_ok and len(req.prompt) >= self.prefix_min_tokens:
+                self.stats["prefix_misses"] += 1   # served cold
+                if _obs.REGISTRY.enabled:
+                    self._m_pmiss.inc()
+            self._register(slot, req)
             if len(req.out) >= req.budget:
                 self._finish(slot)
         self._tables_dirty = True
@@ -583,12 +816,19 @@ class PagedServeEngine(_EngineBase):
                 continue
             nxt_pos = len(req.prompt) + len(req.out) - 1   # row written now
             v = nxt_pos % self.pool.vcap
-            if v // ps < self.pool.n_allocated(i):
-                continue                                   # page in hand
-            if self.pool.alloc(i, 1) is not None:
+            pg_idx = v // ps
+            if pg_idx < self.pool.n_allocated(i):
+                page = int(self.pool.table[i, pg_idx])
+                # page in hand — but a shared page (pinned prefix, or the
+                # ring wrapping back onto one) is immutable: copy-on-write
+                # before this step's KV row lands in it
+                if (self.pool.writable(i, page)
+                        or self._cow(i, pg_idx, req.priority)):
+                    continue
+            elif self.pool.alloc(i, 1) is not None:
                 self._tables_dirty = True
                 continue
-            if self._ensure_pages(1, req.priority, exclude=i):
+            elif self._ensure_pages(1, req.priority, exclude=i):
                 self.pool.alloc(i, 1)
                 self._tables_dirty = True
                 continue
@@ -618,11 +858,23 @@ class PagedServeEngine(_EngineBase):
             self.tables = jnp.asarray(self.pool.table_array())
             self._tables_dirty = False
         keep = np.ones((self.slots,), bool)
+        tbl = self.tables
         if self._stalled:
             keep[list(self._stalled)] = False
+            # a stalled slot must not write: a page-less stall drops its
+            # KV write anyway, but a COW-stall's write would land in a
+            # SHARED page — blank the whole row (its output is discarded
+            # and the identical step is retried with the real table)
+            masked = self.pool.table_array()
+            masked[list(self._stalled)] = -1
+            tbl = jnp.asarray(masked)
         self._live = jnp.asarray(keep)
-        logits, self.kv = self._step(self.params, self.kv, self.tables,
+        logits, self.kv = self._step(self.params, self.kv, tbl,
                                      self.tokens, self.pos, self._live)
+        if self.kernel == "pallas":
+            self.stats["kv_bytes_avoided"] += self._dense_view_bytes
+            if _obs.REGISTRY.enabled:
+                self._m_bytes.inc(self._dense_view_bytes)
         nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
         if self._stalled:
             # stalled slots hold position: same token, same pos, identical
@@ -639,4 +891,10 @@ class PagedServeEngine(_EngineBase):
         s = dict(self.pool.stats)
         s["occupancy"] = self.pool.occupancy
         s["free_pages"] = self.pool.free_pages
+        s["pinned_prefixes"] = len(self.pool.prefix_keys())
         return s
+
+    def kv_row_bytes(self) -> int:
+        """Bytes one KV cache row costs across all attention layers (for
+        bytes-on-wire style accounting of ``stats['prefill_rows']``)."""
+        return self._kv_row_bytes
